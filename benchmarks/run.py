@@ -1,0 +1,138 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (quick mode by default; pass
+--full for the long versions).
+
+  Table 1 / Fig 2  -> scaling            (cost model vs paper + HLO bytes)
+  Table 2 / 3      -> container_overhead (capsule vs bare throughput/memory)
+  SII-H            -> allreduce_vs_ps    (collective-traffic contrast)
+  deliverable (g)  -> roofline           (summary of results/roofline.jsonl)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+
+def _roofline_summary(rows):
+    path = "results/roofline.jsonl"
+    if not os.path.exists(path):
+        rows.append(("roofline/missing", 0.0,
+                     "run: python -m benchmarks.roofline"))
+        return
+    from benchmarks.roofline import terms
+    recs = [json.loads(l) for l in open(path)]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    doms = {}
+    for rec in ok:
+        t = terms(rec)
+        doms[t["dominant"]] = doms.get(t["dominant"], 0) + 1
+        rows.append((f"roofline/{rec['arch']}/{rec['shape']}",
+                     (t["compute_s"] + t["memory_s"] + t["collective_s"]) * 1e6,
+                     f"dom={t['dominant']} c={t['compute_s']*1e3:.2f}ms "
+                     f"m={t['memory_s']*1e3:.2f}ms "
+                     f"x={t['collective_s']*1e3:.2f}ms "
+                     f"useful={t['useful_flops_ratio']:.2f}"))
+    rows.append(("roofline/dominant_terms", 0.0,
+                 " ".join(f"{k}:{v}" for k, v in sorted(doms.items()))))
+
+
+def _kernel_micro(rows):
+    """Microbenchmark the jnp hot paths the Pallas kernels replace (CPU
+    timings; the kernels themselves are TPU-target, validated in
+    interpret mode by tests/test_kernels.py)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.attention import attend
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(0)
+
+    q = jax.random.normal(key, (1, 512, 2, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(key, (1, 512, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(key, (1, 512, 2, 64), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: attend(q, k, v, scale=0.125, causal=True))
+    f(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = f(q, k, v)
+    out.block_until_ready()
+    rows.append(("attend_ref/512tok_bf16", (time.perf_counter() - t0) / 10 * 1e6,
+                 "jnp reference path (Pallas flash kernel = TPU hot path)"))
+
+    x = jax.random.normal(key, (1, 512, 4, 64))
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 512, 4)))
+    A = -jnp.exp(jax.random.normal(key, (4,)))
+    B = jax.random.normal(key, (1, 512, 1, 64))
+    C = jax.random.normal(key, (1, 512, 1, 64))
+    g = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    g(x, dt, A, B, C).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = g(x, dt, A, B, C)
+    out.block_until_ready()
+    rows.append(("ssd_ref/512tok", (time.perf_counter() - t0) / 10 * 1e6,
+                 "jnp reference path (Pallas ssd_scan = TPU hot path)"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", help="comma list: scaling,overhead,ps,physics,"
+                                   "roofline,kernels")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    rows = []
+
+    def want(name):
+        return only is None or name in only
+
+    if want("scaling"):
+        from benchmarks import scaling
+        try:
+            rows += scaling.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("scaling/FAILED", 0.0, "see stderr"))
+    if want("ps"):
+        from benchmarks import allreduce_vs_ps
+        try:
+            rows += allreduce_vs_ps.run()
+        except Exception:
+            traceback.print_exc()
+            rows.append(("allreduce_vs_ps/FAILED", 0.0, "see stderr"))
+    if want("overhead"):
+        from benchmarks import container_overhead
+        try:
+            rows += container_overhead.run()
+        except Exception:
+            traceback.print_exc()
+            rows.append(("container_overhead/FAILED", 0.0, "see stderr"))
+    if want("kernels"):
+        try:
+            _kernel_micro(rows)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("kernels/FAILED", 0.0, "see stderr"))
+    if want("physics"):
+        from benchmarks import physics_validation
+        try:
+            rows += physics_validation.run(
+                train_steps=60 if args.full else 25)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("physics/FAILED", 0.0, "see stderr"))
+    if want("roofline"):
+        _roofline_summary(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

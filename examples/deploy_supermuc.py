@@ -1,0 +1,61 @@
+"""The paper's deployment story, blow by blow (§II-A, §III-B, §IV).
+
+Demonstrates every failure mode the paper describes and the capsule fix:
+  1. shared-Python dependency breakage (TensorFlow-then-Caffe),
+  2. pip-install-on-the-cluster dying (air gap),
+  3. Docker/Singularity refused by site security policy,
+  4. the Charliecloud build->flatten->transfer->unpack->run path succeeding,
+  5. single-node and multi-node Slurm scripts (§IV-B/C).
+
+Run:  PYTHONPATH=src python examples/deploy_supermuc.py
+"""
+import tempfile
+from pathlib import Path
+
+from repro.core import container as C
+from repro.core import deploy as D
+from repro.core import registry as R
+
+
+def main():
+    idx = R.default_index()
+
+    print("== 1. the shared-Python failure (paper §II-A) ==")
+    env = R.SharedEnvironment(idx)
+    env.pip_install("tensorflow==1.11.0")
+    print("  installed tensorflow 1.11:", not env.check())
+    env.pip_install("caffe==1.0.0")
+    for root, problems in env.check().items():
+        print(f"  BROKEN {root}: {problems}")
+
+    print("\n== 2. pip install on the cluster dies (air gap) ==")
+    try:
+        C.CLUSTER.require_internet("pip install tensorflow")
+    except R.OfflineViolation as e:
+        print("  OfflineViolation:", e)
+
+    print("\n== 3. site security policy (paper §II-C..F) ==")
+    pol = C.SecurityPolicy()
+    for rt in ("docker", "singularity", "shifter", "charliecloud"):
+        try:
+            pol.admit(C.RUNTIME_PROFILES[rt])
+            print(f"  {rt}: ADMITTED")
+        except C.SecurityError as e:
+            print(f"  {rt}: refused — {e}")
+
+    print("\n== 4. the Charliecloud path (paper §III-B) ==")
+    with tempfile.TemporaryDirectory() as td:
+        pipe = D.DeploymentPipeline(index=idx)
+        dep = pipe.deploy(D.intel_tensorflow_image(), Path(td),
+                          nodes=32, ranks_per_node=1)
+        for line in dep.log:
+            print("  ", line)
+        res = dep.run(lambda: "hello from inside the capsule", ranks=2)
+        print("   ch-run:", res[0].value, f"[uid_map {res[0].uid_map}]")
+
+        print("\n== 5. Slurm submission (§IV-C, 32 nodes) ==")
+        print("\n".join("   " + l for l in dep.slurm_script.splitlines()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the paper's workflow end-to-end in two minutes.
+
+1. Build an environment capsule on the "workstation" (deps resolved against
+   the offline index — the cluster never touches the network).
+2. Deploy it through the Charliecloud-style pipeline (flatten -> transfer ->
+   unpack) and render the Slurm script.
+3. Inside the capsule, train a small LM for a few steps with the
+   paper-faithful Horovod-DP engine and show the loss going down.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import get_smoke_config
+from repro.core import deploy as D
+from repro.core import hvd
+from repro.data import SyntheticTokenSource, TokenDatasetSpec
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+
+
+def train_inside_capsule(steps: int = 20):
+    cfg = get_smoke_config("qwen2-0.5b")
+    mesh = make_host_mesh()
+    n_dev = len(jax.devices())
+    spec = TokenDatasetSpec(vocab_size=cfg.vocab_size, seq_len=128,
+                            global_batch=max(8, n_dev))
+    source = SyntheticTokenSource(spec)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = optim.rmsprop(2e-3, clip_norm=1.0)
+    opt_state = opt.init(params)
+    step = hvd.make_train_step(lambda p, b: T.lm_loss(p, cfg, b), opt, mesh)
+    losses = []
+    for i in range(steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in source.batch(i).items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        if i % 5 == 0:
+            print(f"  step {i:3d}  loss {losses[-1]:.4f}")
+    print(f"  loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({'DOWN' if losses[-1] < losses[0] else 'up?!'})")
+    return losses
+
+
+def main():
+    print("== 1. build + deploy the capsule (paper §III-B) ==")
+    with tempfile.TemporaryDirectory() as td:
+        pipe = D.DeploymentPipeline()
+        dep = pipe.deploy(D.intel_tensorflow_image("quickstart"),
+                          Path(td), nodes=4)
+        for line in dep.log:
+            print("  ", line)
+        print("\n== 2. the generated Slurm submission (paper §IV-C) ==")
+        print("  ", dep.slurm_script.splitlines()[-1])
+        print("\n== 3. Horovod-DP training inside the capsule ==")
+        results = dep.run(train_inside_capsule, ranks=1)
+        print(f"\ncapsule run complete: image={results[0].image} "
+              f"uid_map='{results[0].uid_map}' "
+              f"wall={results[0].wall_time_s:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

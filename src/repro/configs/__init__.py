@@ -1,0 +1,55 @@
+"""Architecture config registry.
+
+``--arch <id>`` ids use the assigned names (dashes); modules use
+underscores.  Every entry exports CONFIG (exact assigned numbers) and
+SMOKE_CONFIG (reduced same-family variant for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.configs.base import (InputShape, ModelConfig, SHAPES, input_specs,
+                                shape_skips, synthesize_inputs)
+
+_MODULES = {
+    "whisper-small": "whisper_small",
+    "gemma2-27b": "gemma2_27b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "gemma2-2b": "gemma2_2b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "gan3d": "gan3d",
+}
+
+ARCHS: List[str] = [a for a in _MODULES if a != "gan3d"]
+
+
+def _module(arch: str):
+    key = arch if arch in _MODULES else arch.replace("_", "-")
+    if key not in _MODULES:
+        key = {v: k for k, v in _MODULES.items()}.get(arch, key)
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[key]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE_CONFIG
+
+
+def default_strategy(cfg: ModelConfig) -> str:
+    """Baseline sharding strategy per DESIGN.md §3: TP for models whose
+    replicated weights fit one chip's HBM; FSDP+TP for the big archs."""
+    n = cfg.param_count()
+    if n >= 20e9:
+        return "fsdp_tp"
+    return "dp_tp"

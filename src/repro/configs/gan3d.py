@@ -1,0 +1,5 @@
+"""3DGAN config — the paper's CERN workload (not part of the 40-pair table)."""
+from repro.models.gan3d import GAN3DConfig
+
+CONFIG = GAN3DConfig()
+SMOKE_CONFIG = GAN3DConfig(name="3dgan-smoke", g_base=8, d_base=4)

@@ -1,0 +1,4 @@
+"""The paper's primary contribution: secure container deployment of AI
+frameworks on air-gapped HPC (Charliecloud-style capsules) + Horovod-style
+allreduce data parallelism, in JAX."""
+from repro.core import container, deploy, hvd, paramserver, registry  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.data.calorimeter import CalorimeterSpec, CalorimeterSource, generate_batch
+from repro.data.pipeline import ShardedLoader, SyntheticTokenSource, TokenDatasetSpec

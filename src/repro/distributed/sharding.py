@@ -1,0 +1,231 @@
+"""Sharding strategies: parameter/batch/cache PartitionSpecs per strategy.
+
+Strategies (see DESIGN.md §3/§6):
+  dp       — paper-faithful Horovod data parallelism: weights REPLICATED,
+             batch sharded over every mesh axis.  Only fits sub-HBM models.
+  dp_tp    — batch over ('pod','data'), tensor parallelism over 'model'
+             (heads / d_ff / experts / vocab).  The minimal extension that
+             makes the >=27B archs deployable; weights replicated over data.
+  fsdp_tp  — dp_tp plus ZeRO-3-style parameter+optimizer sharding over
+             'data' (beyond-paper default for the big archs).
+
+Specs are derived from the *parameter path* + rank: every stacked-layer
+leaf carries leading stack dims (scan axes) that are never sharded; the
+trailing "physical" dims follow Megatron-style rules (column-parallel in,
+row-parallel out), experts shard over 'model' (expert parallelism), vocab
+over 'model'.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+STRATEGIES = ("dp", "dp_tp", "fsdp_tp")
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch-parallel axes: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def all_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _n_stack(path: str, cfg) -> int:
+    """Number of leading scan/stack dims for a param leaf at ``path``."""
+    if path.startswith("layers"):
+        if cfg.family in ("dense", "vlm", "moe"):
+            return 2                       # (groups, pattern, ...)
+        if cfg.family == "hybrid":
+            return 2                       # (groups, attn_every, ...)
+        return 1                           # ssm / encdec decoder: (L, ...)
+    if path.startswith("tail_layers"):
+        return 1
+    if path.startswith("encoder/layers"):
+        return 1
+    return 0                               # embed, norms, shared_attn, ...
+
+
+def _trailing_spec(path: str, trailing_rank: int, cfg,
+                   fsdp: bool) -> Tuple[Optional[str], ...]:
+    """Megatron-style spec for the physical (post-stack) dims."""
+    d = "data" if fsdp else None
+    leaf = path.split("/")
+
+    def is_(*names):
+        return any(n in leaf for n in names)
+
+    # ---- MoE experts: (E, d, f) / (E, f, d) — expert parallel over model --
+    if is_("moe"):
+        if leaf[-2] in ("wi", "wg") or leaf[-1] in ("wi", "wg"):
+            return ("model", d, None)
+        if leaf[-2] == "wo" or leaf[-1] == "wo":
+            return ("model", None, d)
+        if is_("router"):
+            return (d, None)
+    # ---- attention ---------------------------------------------------------
+    if is_("attn", "cross_attn"):
+        if leaf[-2] in ("wq", "wk", "wv"):
+            if leaf[-1] == "w":            # (d, heads, dh): column parallel
+                return (d, "model", None)
+            return ("model", None)         # bias (heads, dh)
+        if leaf[-2] == "wo":               # (h*dh, d): row parallel
+            return ("model", d) if leaf[-1] == "w" else (None,)
+    # ---- dense MLP -----------------------------------------------------------
+    if is_("mlp"):
+        if leaf[-2] in ("wi", "wg"):
+            return (d, "model") if leaf[-1] == "w" else ("model",)
+        if leaf[-2] == "wo":
+            return ("model", d) if leaf[-1] == "w" else (None,)
+    # ---- Mamba2 ---------------------------------------------------------------
+    if is_("mamba"):
+        if leaf[-2] == "in_proj":          # (d, 2di+2GN+H): column parallel
+            return (d, "model") if leaf[-1] == "w" else ("model",)
+        if leaf[-2] == "out_proj":         # (di, d): row parallel
+            return ("model", d) if leaf[-1] == "w" else (None,)
+        if leaf[-1] == "conv_w":           # (w, conv_dim)
+            return (None, "model")
+        if leaf[-1] == "conv_b":
+            return ("model",)
+        if leaf[-1] in ("dt_bias", "A_log", "D"):   # (H,)
+            return ("model",)
+        if leaf[-1] == "scale":            # gated-norm scale (di,)
+            return ("model",)
+    # ---- embeddings / head ------------------------------------------------------
+    if leaf[0] == "embed" or leaf[-2:] == ["embed", "table"]:
+        return ("model", d)                # vocab over model, d over data
+    if leaf[0] == "lm_head":
+        return (d, "model")
+    if "pos_embed" in leaf:
+        return (None, d)
+    # ---- norms & everything else: replicate -------------------------------------
+    return tuple([None] * trailing_rank)
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not divide the corresponding dim —
+    e.g. kv_heads=2 cannot shard over a 16-way 'model' axis."""
+    fitted = []
+    for i, entry in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            fitted.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        remaining = shape[i]
+        for ax in axes:
+            n = mesh.shape[ax]
+            if remaining % n == 0:
+                keep.append(ax)
+                remaining //= n
+        fitted.append(tuple(keep) if len(keep) > 1 else
+                      (keep[0] if keep else None))
+    return P(*fitted)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg, strategy: str,
+               mesh: Mesh) -> P:
+    if strategy == "dp":
+        return P()
+    fsdp = strategy == "fsdp_tp"
+    ndim = len(shape)
+    ns = _n_stack(path, cfg)
+    trailing = _trailing_spec(path, ndim - ns, cfg, fsdp)
+    spec = (None,) * ns + tuple(trailing)
+    spec = (spec + (None,) * ndim)[:ndim]
+    return fit_spec(P(*spec), shape, mesh)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def params_pspec(params_struct, cfg, strategy: str, mesh: Mesh):
+    """Tree of PartitionSpecs matching a params (or ShapeDtypeStruct) tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_struct)
+    specs = [param_spec(_path_str(p), tuple(l.shape), cfg, strategy, mesh)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_pspec(opt_state_struct, params_spec_tree):
+    """Optimizer-state specs: moment trees mirror the param specs, scalars
+    replicate."""
+    def per_key(v):
+        # a moment tree has the same treedef as params
+        if jax.tree_util.tree_structure(v) == jax.tree_util.tree_structure(
+                params_spec_tree):
+            return params_spec_tree
+        return jax.tree.map(lambda _: P(), v)
+    return {k: per_key(v) for k, v in opt_state_struct.items()}
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+def batch_pspec(batch_struct, mesh: Mesh, cfg, shape,
+                strategy: str = "dp_tp") -> Any:
+    """Input sharding for a train/prefill/decode batch dict.
+
+    Under pure DP (the paper-faithful strategy) every chip is a Horovod
+    rank: the batch shards over ALL mesh axes; under *_tp the 'model' axis
+    carries tensor parallelism and batch shards over (pod, data) only.
+    """
+    daxes = all_axes(mesh) if strategy == "dp" else data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    B = shape.global_batch
+    batch_shardable = B % dsize == 0 and B >= dsize
+
+    def spec_for(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        if p.startswith("cache"):
+            # cache leaves: (*stack, B, S, KV, dh) attn | (*stack, B, H, N, P)
+            # ssm | (*stack, B, w-1, conv) conv
+            is_attn = p.endswith("/k") or p.endswith("/v")
+            is_ssm = p.endswith("/ssm")
+            stack = nd - (4 if (is_attn or is_ssm) else 3)
+            lead = (None,) * stack
+            batch_ax = daxes if batch_shardable else None
+            if is_attn:
+                kv_heads = leaf.shape[-2]
+                kv_fits = kv_heads % mesh.shape["model"] == 0
+                seq_axes = () if batch_shardable else daxes
+                if kv_fits:
+                    # heads over model (+ seq over data when B=1:
+                    # flash-decoding layout, partial-softmax psum)
+                    return P(*lead, batch_ax, seq_axes or None, "model", None)
+                # kv heads don't divide the model axis: shard the SEQUENCE
+                # over 'model' instead (partial-softmax psum over seq shards)
+                seq = tuple(seq_axes) + ("model",)
+                return P(*lead, batch_ax, seq if len(seq) > 1 else seq[0],
+                         None, None)
+            if is_ssm:
+                return P(*lead, batch_ax, "model", None, None)
+            return P(*lead, batch_ax, None, "model")     # conv state
+        if p == "mrope_positions":                    # (3, B, S)
+            return P(None, daxes if batch_shardable else None, None)
+        # tokens/labels/positions/embeddings: batch-major
+        lead = daxes if batch_shardable else None
+        return P(*((lead,) + (None,) * (nd - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fit_spec(spec_for(p, l), tuple(l.shape), mesh)
+                  for p, l in flat])
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,86 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These are the model-facing entry points: they handle head folding/GQA
+layout, choose interpret mode automatically off-TPU (CPU validation per
+the brief), and are shape-polymorphic over the model stacks' layouts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "interpret"))
+def mha_flash_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        interpret: Optional[bool] = None):
+    """Model-layout flash attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with H = G * KV (GQA).
+    Returns (B, Sq, H, D).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    Bz, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # fold (B, KV, G) -> BH; repeat kv per group via reshape-broadcast
+    qf = q.reshape(Bz, Sq, KV, G, D).transpose(0, 2, 3, 1, 4) \
+        .reshape(Bz * KV * G, Sq, D)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (Bz, KV, G, k.shape[1], D)).reshape(
+                              Bz * KV * G, k.shape[1], D)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (Bz, KV, G, v.shape[1], D)).reshape(
+                              Bz * KV * G, v.shape[1], D)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                              softcap=softcap, scale=scale,
+                              interpret=interpret)
+    return out.reshape(Bz, KV, G, Sq, D).transpose(0, 3, 1, 2, 4) \
+        .reshape(Bz, Sq, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B, C, *, chunk: int = 256,
+        interpret: Optional[bool] = None):
+    """Model-layout SSD scan.
+
+    x: (b, S, H, P); dt: (b, S, H); A: (H,); B, C: (b, S, G, N), G | H.
+    Returns y: (b, S, H, P).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bf = jnp.repeat(B, rep, axis=2)                       # (b, S, H, N)
+    Cf = jnp.repeat(C, rep, axis=2)
+    xf = x.transpose(0, 2, 1, 3).reshape(b * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(b * H, S)
+    Bff = Bf.transpose(0, 2, 1, 3).reshape(b * H, S, N)
+    Cff = Cf.transpose(0, 2, 1, 3).reshape(b * H, S, N)
+    Af = jnp.broadcast_to(A[None], (b, H)).reshape(b * H)
+    y = _ssd.ssd_scan(xf, dtf, Af, Bff, Cff, chunk, interpret=interpret)
+    return y.reshape(b, H, S, P).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6,
+            interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=interpret)

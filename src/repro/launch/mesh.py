@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
+models the pruned inter-pod link (the paper's 4:1 inter-island OmniPath
+pruning has the same shape: cheap intra-island, scarce inter-island).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; only launch/dryrun.py (which sets XLA_FLAGS first) builds the 512-
+device host mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: Optional[int] = None):
+    """Mesh over whatever host devices exist (smoke tests / examples)."""
+    n = data or len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link

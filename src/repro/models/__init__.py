@@ -1,0 +1,1 @@
+from repro.models import attention, modules, moe, ssm, transformer  # noqa: F401

@@ -1,0 +1,242 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+Prefill/train uses the *chunked* SSD algorithm: within a chunk the SSD is
+computed as a masked attention-like matmul (MXU-friendly quadratic-in-L
+part), across chunks a linear state recurrence is carried by ``lax.scan``.
+This is the TPU-native formulation: the GPU version's warp-level parallel
+scan becomes (a) big dense intra-chunk matmuls on the MXU plus (b) a short
+sequential scan over S/L chunk states — exactly the structure the Pallas
+kernel in ``repro/kernels/ssd_scan.py`` tiles into VMEM (its grid is
+sequential over chunks, the state lives in a VMEM accumulator).
+
+Decode is the O(1) recurrent step over the (B, H, N, P) state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import modules as nn
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_num_heads
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    w = cfg.ssm_conv_width
+    conv_dim = di + 2 * G * N
+    k1, k2, k3 = jax.random.split(key, 3)
+    # in_proj -> [z(di), x(di), B(G*N), C(G*N), dt(H)]
+    d_in_proj = 2 * di + 2 * G * N + H
+    dt_target = jnp.exp(jnp.linspace(np.log(1e-3), np.log(1e-1), H))
+    dt_init = jnp.log(jnp.expm1(dt_target))                       # softplus^-1
+    return {
+        "in_proj": nn.init_linear(k1, d, d_in_proj),
+        "conv_w": nn.truncated_normal_init(k2, (w, conv_dim), 1.0 / np.sqrt(w)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": nn.init_rmsnorm(di),
+        "out_proj": nn.init_linear(k3, di, d),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    di, G, N, H = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_num_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * G * N]
+    dt = zxbcdt[..., di + di + 2 * G * N:]
+    return z, xBC, dt
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (reference; the Pallas kernel mirrors this tiling)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int,
+                initial_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan.
+
+    x:  (b, S, H, P)   per-head inputs
+    dt: (b, S, H)      positive step sizes (softplus applied by caller)
+    A:  (H,)           negative per-head decay rates
+    B:  (b, S, G, N)   input projections (G groups, broadcast to heads)
+    C:  (b, S, G, N)   output projections
+    Returns (y (b, S, H, P), final_state (b, H, N, P)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    L = min(chunk, S)
+    S_orig = S
+    if S % L != 0:
+        # pad to a chunk multiple: dt=0 padding is inert (decay exp(0)=1,
+        # zero input contribution), so state and outputs are unaffected
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // L
+    rep = H // G
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)           # (b,S,H,N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    # reshape into chunks
+    xc = xf.reshape(b, nc, L, H, P)
+    dc = dtf.reshape(b, nc, L, H)
+    Bc = Bf.reshape(b, nc, L, H, N)
+    Cc = Cf.reshape(b, nc, L, H, N)
+
+    da = dc * A[None, None, None, :]                              # (b,nc,L,H) log-decay
+    cum = jnp.cumsum(da, axis=2)                                  # inclusive cumsum
+    seg_total = cum[:, :, -1:, :]                                 # (b,nc,1,H)
+
+    # ---- intra-chunk (quadratic in L, MXU) -------------------------------------
+    # M[i,j] = C_i . B_j * exp(cum_i - cum_j) * dt_j   for i >= j
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", Cc, Bc)             # (b,nc,H,L,L)
+    decay = jnp.exp(cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+                    - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    gates = jnp.where(mask[None, None, None], decay, 0.0)
+    M = scores * gates * dc.transpose(0, 1, 3, 2)[:, :, :, None, :]   # dt_j factor
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", M, xc)
+
+    # ---- chunk states ------------------------------------------------------------
+    # state contribution of chunk c: sum_j exp(seg_total - cum_j) * dt_j B_j x_j^T
+    w = jnp.exp(seg_total - cum) * dc                             # (b,nc,L,H)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchnp", w, Bc, xc)     # (b,nc,H,N,P)
+
+    # ---- inter-chunk recurrence (sequential scan over nc) --------------------------
+    seg_decay = jnp.exp(seg_total[:, :, 0, :])                    # (b,nc,H)
+    h0 = (jnp.zeros((b, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h_prev, inp):
+        dec, st = inp                                             # (b,H), (b,H,N,P)
+        h_new = dec[:, :, None, None] * h_prev + st
+        return h_new, h_prev                                      # emit state *entering* chunk
+
+    _, h_enter = jax.lax.scan(
+        step, h0, (jnp.moveaxis(seg_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                         # (b,nc,H,N,P)
+    final_state = (seg_decay[:, -1, :, None, None] * h_enter[:, -1]
+                   + states[:, -1])
+
+    # ---- inter-chunk output: y_i += C_i . (exp(cum_i) * h_enter) --------------------
+    y_inter = jnp.einsum("bclhn,bchnp->bclhp",
+                         Cc * jnp.exp(cum)[..., None], h_enter)
+
+    y = (y_intra + y_inter).reshape(b, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """One-token recurrence.
+
+    state: (b, H, N, P); x: (b, H, P); dt: (b, H); B, C: (b, G, N).
+    Returns (y (b, H, P), new_state).
+    """
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=1)           # (b,H,N)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    dec = jnp.exp(dtf * A[None, :])                               # (b,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dtf, Bf, x.astype(jnp.float32))
+    new_state = dec[:, :, None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d over the (x, B, C) channels
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(xBC, conv_w, conv_b, conv_state=None):
+    """xBC: (b, S, Cdim); conv_w: (w, Cdim).  Returns (out, new_conv_state).
+
+    conv_state: (b, w-1, Cdim) trailing inputs from previous steps (decode).
+    """
+    w = conv_w.shape[0]
+    xf = xBC.astype(jnp.float32)
+    if conv_state is None:
+        pad = jnp.zeros((xf.shape[0], w - 1, xf.shape[2]), jnp.float32)
+    else:
+        pad = conv_state.astype(jnp.float32)
+    xp = jnp.concatenate([pad, xf], axis=1)                       # (b, S+w-1, C)
+    out = sum(xp[:, i:i + xf.shape[1]] * conv_w[i][None, None]
+              for i in range(w))
+    out = out + conv_b[None, None]
+    new_state = xp[:, -(w - 1):] if w > 1 else pad
+    return jax.nn.silu(out).astype(xBC.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_block(params, cfg, x, cache=None):
+    """x: (B, S, d_model).  cache: {"ssm": (B,H,N,P), "conv": (B,w-1,Cdim)}
+    for one-token decode (S == 1).  Returns (out, new_cache)."""
+    Bsz, S, d = x.shape
+    di, H, N, G, P = (cfg.ssm_d_inner, cfg.ssm_num_heads, cfg.ssm_state,
+                      cfg.ssm_groups, cfg.ssm_head_dim)
+    dt_ = jnp.dtype(cfg.dtype)
+
+    zxbcdt = nn.linear(params["in_proj"], x, dtype=dt_)
+    z, xBC, dt_raw = _split_in_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])         # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))             # (H,)
+
+    if cache is not None:
+        xBC, new_conv = causal_conv1d(xBC, params["conv_w"], params["conv_b"],
+                                      conv_state=cache["conv"])
+        xs = xBC[..., :di].reshape(Bsz, 1, H, P)[:, 0]            # (B,H,P)
+        Bmat = xBC[..., di:di + G * N].reshape(Bsz, G, N)
+        Cmat = xBC[..., di + G * N:].reshape(Bsz, G, N)
+        y, new_ssm = ssd_decode_step(cache["ssm"], xs, dt[:, 0], A, Bmat, Cmat)
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(Bsz, 1, di).astype(dt_)
+        new_cache = {"ssm": new_ssm.astype(cache["ssm"].dtype), "conv": new_conv.astype(cache["conv"].dtype)}
+    else:
+        xBC, _ = causal_conv1d(xBC, params["conv_w"], params["conv_b"])
+        xs = xBC[..., :di].reshape(Bsz, S, H, P)
+        Bmat = xBC[..., di:di + G * N].reshape(Bsz, S, G, N)
+        Cmat = xBC[..., di + G * N:].reshape(Bsz, S, G, N)
+        y, _ = ssd_chunked(xs, dt, A, Bmat, Cmat, cfg.ssm_chunk)
+        y = (y.astype(jnp.float32)
+             + params["D"].astype(jnp.float32)[None, None, :, None]
+             * xs.astype(jnp.float32))
+        y = y.reshape(Bsz, S, di).astype(dt_)
+        new_cache = None
+
+    # gated RMSNorm (Mamba2's norm-before-out-proj with silu(z) gate)
+    y = nn.rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_),
+                   eps=cfg.norm_eps)
+    out = nn.linear(params["out_proj"], y, dtype=dt_)
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg, batch: int, dtype=jnp.float32):
+    H, N, P = cfg.ssm_num_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, N, P), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }

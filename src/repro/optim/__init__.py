@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, apply_updates,
+                                    clip_by_global_norm, get, global_norm,
+                                    rmsprop, sgd)
+from repro.optim import schedules  # noqa: F401

@@ -1,0 +1,146 @@
+"""Optimizers (optax-like ``update(grads, state, params) -> (updates, state)``).
+
+RMSProp is first-class because the paper's 3DGAN trains with RMSProp [29].
+All states are pytrees of f32 master-precision tensors; updates are returned
+in f32 and cast onto the param dtype by the caller (mixed-precision rule:
+bf16 compute, f32 state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+def _lr_at(lr: ScalarOrSchedule, count) -> jnp.ndarray:
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+# ---------------------------------------------------------------------------
+
+def sgd(lr: ScalarOrSchedule, momentum: float = 0.0,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        s = {"count": jnp.zeros((), jnp.int32)}
+        if momentum:
+            s["mu"] = _zeros_like_f32(params)
+        return s
+
+    def update(grads, state, params):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step_lr = _lr_at(lr, state["count"])
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], g32)
+            upd = jax.tree.map(lambda m: -step_lr * m, mu)
+            return upd, {"count": state["count"] + 1, "mu": mu}
+        return jax.tree.map(lambda g: -step_lr * g, g32), \
+            {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# RMSProp (the paper's 3DGAN optimizer)
+# ---------------------------------------------------------------------------
+
+def rmsprop(lr: ScalarOrSchedule, decay: float = 0.9, eps: float = 1e-8,
+            clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "nu": _zeros_like_f32(params)}
+
+    def update(grads, state, params):
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step_lr = _lr_at(lr, state["count"])
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        nu = jax.tree.map(lambda n, g: decay * n + (1 - decay) * g * g,
+                          state["nu"], g32)
+        upd = jax.tree.map(lambda g, n: -step_lr * g / (jnp.sqrt(n) + eps),
+                           g32, nu)
+        return upd, {"count": state["count"] + 1, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": _zeros_like_f32(params),
+                "nu": _zeros_like_f32(params)}
+
+    def update(grads, state, params):
+        gnorm = global_norm(grads)
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        step_lr = _lr_at(lr, state["count"])
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], g32)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g,
+                          state["nu"], g32)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def u(m, n, p):
+            upd = -step_lr * (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                upd = upd - step_lr * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        upd = jax.tree.map(u, mu, nu, params)
+        return upd, {"count": count, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: ScalarOrSchedule, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u).astype(p.dtype), params, updates)
+
+
+def get(name: str, lr: ScalarOrSchedule, **kw) -> Optimizer:
+    return {"sgd": sgd, "rmsprop": rmsprop, "adam": adam,
+            "adamw": adamw}[name](lr, **kw)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def schedule(count):
+        c = count.astype(jnp.float32) if hasattr(count, "astype") \
+            else jnp.asarray(count, jnp.float32)
+        warm = peak * c / max(warmup_steps, 1)
+        progress = jnp.clip((c - warmup_steps) /
+                            max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(np.pi * progress))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return schedule
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def schedule(count):
+        c = jnp.maximum(count.astype(jnp.float32), 1.0)
+        return peak * jnp.minimum(c / warmup_steps,
+                                  jnp.sqrt(warmup_steps / c))
+    return schedule

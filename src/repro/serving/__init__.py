@@ -1,0 +1,1 @@
+from repro.serving.engine import Request, SamplingParams, ServingEngine, make_serve_step

@@ -1,0 +1,118 @@
+"""Batched serving engine: KV-cache management, prefill, decode, sampling.
+
+The serving counterpart of the deployment story: the same capsule image
+serves a model with batched requests.  The engine keeps one ragged batch of
+sequences; prefill replays prompt tokens through ``decode_step`` under a
+``lax.scan`` (compiled once), decode samples one token per step for every
+live sequence.  ``serve_step`` — one token against a seq_len cache — is the
+exact program the decode dry-run shapes lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclass
+class SamplingParams:
+    temperature: float = 1.0
+    greedy: bool = False
+    max_new_tokens: int = 32
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                       # (prompt_len,) int32
+    params: SamplingParams = field(default_factory=SamplingParams)
+    # enc-dec (whisper): precomputed frame embeddings (enc_seq, d_model);
+    # the engine runs the encoder once at prefill
+    encoder_input: Optional[np.ndarray] = None
+
+
+def make_serve_step(cfg, *, long_context: bool = False):
+    """serve_step(params, batch) -> (logits, new_cache); batch carries
+    tokens (B,1), positions (B,), cache (and encoder_output / mrope)."""
+    def serve_step(params, batch):
+        return T.decode_step(params, cfg, batch, long_context=long_context)
+    return serve_step
+
+
+class ServingEngine:
+    """Fixed-slot batched engine (continuous batching over ``max_slots``)."""
+
+    def __init__(self, cfg, params, max_seq_len: int, max_slots: int = 8,
+                 rng_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq_len = max_seq_len
+        self.max_slots = max_slots
+        self.key = jax.random.PRNGKey(rng_seed)
+        self._step = jax.jit(make_serve_step(cfg))
+
+        def prefill(params, tokens, cache, encoder_output):
+            """Replay (B, P) prompt tokens through decode_step via scan."""
+            B, P = tokens.shape
+
+            def body(carry, t):
+                cache, pos = carry
+                batch = {"tokens": tokens[:, t][:, None], "positions": pos,
+                         "cache": cache}
+                if encoder_output is not None:
+                    batch["encoder_output"] = encoder_output
+                logits, cache = T.decode_step(params, cfg, batch)
+                return (cache, pos + 1), logits[:, 0]
+
+            (cache, pos), logits = jax.lax.scan(
+                body, (cache, jnp.zeros((B,), jnp.int32)), jnp.arange(P))
+            return cache, pos, logits[-1]
+
+        self._prefill = jax.jit(prefill)
+        if cfg.family == "encdec":
+            self._encode = jax.jit(
+                lambda params, frames: T._encode(params["encoder"], cfg,
+                                                 frames))
+
+    def _sample(self, logits, sp: SamplingParams):
+        if sp.greedy:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / max(sp.temperature, 1e-4))
+
+    def generate(self, requests: List[Request]) -> List[np.ndarray]:
+        """Serve a batch of requests (padded to equal prompt length)."""
+        assert len(requests) <= self.max_slots
+        B = len(requests)
+        P = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((B, P), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, P - len(r.prompt):] = r.prompt      # left-pad
+        enc_out = None
+        if self.cfg.family == "encdec":
+            frames = jnp.stack([jnp.asarray(r.encoder_input)
+                                for r in requests])
+            enc_out = self._encode(self.params, frames)
+        cache = T.init_cache(self.cfg, B, self.max_seq_len)
+        cache, pos, last_logits = self._prefill(self.params,
+                                                jnp.asarray(prompts), cache,
+                                                enc_out)
+        max_new = max(r.params.max_new_tokens for r in requests)
+        outs = []
+        tok = self._sample(last_logits, requests[0].params)
+        for _ in range(max_new):
+            outs.append(tok)
+            batch = {"tokens": tok[:, None], "positions": pos,
+                     "cache": cache}
+            if enc_out is not None:
+                batch["encoder_output"] = enc_out
+            logits, cache = self._step(self.params, batch)
+            pos = pos + 1
+            tok = self._sample(logits[:, 0], requests[0].params)
+        gen = np.stack([np.asarray(o) for o in outs], axis=1)    # (B, new)
+        return [gen[i, :requests[i].params.max_new_tokens] for i in range(B)]

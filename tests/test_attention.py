@@ -1,0 +1,123 @@
+"""Attention unit + property tests."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models import attention as A
+
+
+def _naive(q, k, v, scale, causal, window=None, softcap=None):
+    """Unchunked reference in f64."""
+    B, Sq, KV, G, D = q.shape
+    Skv = k.shape[1]
+    qf = np.asarray(q, np.float64)
+    kf = np.asarray(k, np.float64)
+    vf = np.asarray(v, np.float64)
+    s = np.einsum("bqkgd,btkd->bkgqt", qf, kf) * scale
+    if softcap:
+        s = softcap * np.tanh(s / softcap)
+    qpos = np.arange(Sq)[:, None]
+    kpos = np.arange(Skv)[None, :]
+    m = np.ones((Sq, Skv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window:
+        m &= (qpos - kpos) < window
+    s = np.where(m, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bkgqt,btkd->bqkgd", p, vf)
+
+
+@pytest.mark.parametrize("window,softcap,causal", [
+    (None, None, True), (8, None, True), (None, 30.0, True),
+    (4, 50.0, True), (None, None, False)])
+def test_attend_matches_naive(window, softcap, causal, rng_key):
+    B, S, KV, G, D = 2, 64, 2, 3, 16
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    out = A.attend(q, k, v, scale=0.25, causal=causal, window=window,
+                   softcap_val=softcap, q_chunk=16)
+    ref = _naive(q, k, v, 0.25, causal, window, softcap)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5)
+
+
+def test_chunked_equals_unchunked(rng_key):
+    B, S, KV, G, D = 1, 128, 1, 2, 8
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    o1 = A.attend(q, k, v, scale=0.3, causal=True, q_chunk=0)
+    o2 = A.attend(q, k, v, scale=0.3, causal=True, q_chunk=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity(rng_key):
+    """RoPE is a rotation (norm preserved) and q.k depends only on the
+    position DIFFERENCE."""
+    B, S, H, D = 1, 8, 1, 32
+    q = jax.random.normal(rng_key, (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    qr = A.apply_rope(q, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(qr), axis=-1),
+        np.linalg.norm(np.asarray(q), axis=-1), rtol=1e-5)
+    # relativity: shift all positions by 17, pairwise dots unchanged
+    qr2 = A.apply_rope(q, pos + 17)
+    d1 = np.einsum("bshd,bthd->bst", np.asarray(qr), np.asarray(qr))
+    d2 = np.einsum("bshd,bthd->bst", np.asarray(qr2), np.asarray(qr2))
+    np.testing.assert_allclose(d1, d2, atol=1e-4)
+
+
+def test_mrope_sections_select_position_streams(rng_key):
+    """With all three streams equal, M-RoPE == standard RoPE."""
+    B, S, H, D = 1, 6, 1, 16
+    q = jax.random.normal(rng_key, (B, S, H, D))
+    pos1 = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    pos3 = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+    r1 = A.apply_rope(q, pos1)
+    r3 = A.apply_rope(q, pos3, mrope_sections=(4, 2, 2))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r3), atol=1e-6)
+
+
+def test_decode_cache_matches_prefill(rng_key):
+    """attention_block decode over a growing cache == full-sequence block."""
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=11,
+                      dtype="float32")
+    params = A.init_attention(rng_key, cfg)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1), (B, S, 32))
+    full, _ = A.attention_block(params, cfg, x, causal=True)
+    cache = {"k": jnp.zeros((B, S, 2, 8)), "v": jnp.zeros((B, S, 2, 8))}
+    outs = []
+    for t in range(S):
+        o, cache = A.attention_block(
+            params, cfg, x[:, t:t + 1],
+            positions=jnp.full((B, 1), t),
+            cache=cache, cache_index=jnp.full((B,), t, jnp.int32))
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sq=st.integers(1, 24), skv=st.integers(1, 48),
+       window=st.one_of(st.none(), st.integers(1, 16)))
+def test_mask_bias_properties(sq, skv, window):
+    """Causal mask: row i admits exactly min(i+1, window) keys (within skv)."""
+    bias = A._mask_bias(jnp.arange(sq), jnp.arange(skv), causal=True,
+                        window=window)
+    admitted = np.asarray(bias == 0.0).sum(axis=-1)
+    for i in range(sq):
+        lo = 0 if window is None else max(0, i - window + 1)
+        hi = min(i, skv - 1)                  # causal upper bound
+        expect = max(0, hi - lo + 1)
+        assert admitted[i] == expect, (i, admitted[i], expect)

@@ -1,0 +1,90 @@
+"""Charliecloud-capsule workflow + site security policy tests."""
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.core import container as C
+from repro.core import deploy as D
+from repro.core.registry import OfflineViolation, default_index
+
+
+@pytest.fixture
+def pipeline():
+    return D.DeploymentPipeline(index=default_index())
+
+
+def test_build_requires_workstation():
+    builder = C.ImageBuilder(default_index(), context=C.CLUSTER)
+    with pytest.raises(OfflineViolation):
+        builder.build(C.ImageDefinition("x", requirements=("numpy>=1.14",)))
+
+
+def test_full_pipeline_and_run(tmp_path, pipeline):
+    dep = pipeline.deploy(D.intel_tensorflow_image("t1"), tmp_path, nodes=4)
+    assert dep.archive.exists() and dep.unpacked.exists()
+    assert "mpiexec -n 4 -ppn 1 ch-run" in dep.slurm_script
+    res = dep.run(lambda: os.environ["REPRO_CAPSULE"], ranks=3)
+    assert [r.value for r in res] == ["t1"] * 3
+    assert res[1].rank == 1 and res[1].world_size == 3
+
+
+def test_env_scrubbed_and_restored(tmp_path, pipeline):
+    dep = pipeline.deploy(D.intel_tensorflow_image("t2"), tmp_path)
+    os.environ["SSH_AUTH_SOCK"] = "/tmp/ssh-evil"
+    try:
+        res = dep.run(lambda: os.environ.get("SSH_AUTH_SOCK", "SCRUBBED"))
+        assert res[0].value == "SCRUBBED"
+        assert os.environ["SSH_AUTH_SOCK"] == "/tmp/ssh-evil"  # restored
+    finally:
+        del os.environ["SSH_AUTH_SOCK"]
+
+
+def test_pip_inside_capsule_dies(tmp_path, pipeline):
+    dep = pipeline.deploy(D.intel_tensorflow_image("t3"), tmp_path)
+    with pytest.raises(OfflineViolation):
+        dep.run(lambda: C.capsule_pip_install("pandas"))
+
+
+def test_image_immutability(tmp_path, pipeline):
+    dep = pipeline.deploy(D.intel_tensorflow_image("t4"), tmp_path)
+
+    def vandalize():
+        root = Path(os.environ["REPRO_CAPSULE_ROOT"])
+        (root / "image" / "manifest.json").write_text("{}")
+        return True
+
+    with pytest.raises(C.SecurityError, match="immutability"):
+        dep.run(vandalize)
+    # with -w (writeable) it is allowed, like ch-run -w
+    dep2 = pipeline.deploy(D.intel_tensorflow_image("t5"), tmp_path)
+    dep2.runtime.run(dep2.unpacked, vandalize, writeable=True)
+
+
+def test_unpack_refuses_hash_mismatch(tmp_path):
+    idx = default_index()
+    b = C.ImageBuilder(idx)
+    img1 = b.build(C.ImageDefinition("same-name", requirements=("numpy>=1.14",)))
+    img2 = b.build(C.ImageDefinition("same-name", requirements=("six>=1.10",)))
+    a1 = C.flatten(img1, tmp_path / "w1")
+    a2 = C.flatten(img2, tmp_path / "w2")
+    C.unpack(a1, tmp_path / "tmpfs")
+    with pytest.raises(C.SecurityError, match="hash mismatch"):
+        C.unpack(a2, tmp_path / "tmpfs")
+
+
+def test_site_policy_rejects_docker_singularity_admits_charliecloud():
+    pol = C.SecurityPolicy()
+    with pytest.raises(C.SecurityError):
+        pol.admit(C.RUNTIME_PROFILES["docker"])
+    with pytest.raises(C.SecurityError):
+        pol.admit(C.RUNTIME_PROFILES["singularity"])
+    pol.admit(C.RUNTIME_PROFILES["charliecloud"])  # no raise
+
+
+def test_slurm_script_single_vs_multi():
+    from repro.launch import slurm
+    s1 = slurm.render_script("j", "/img", "python", nodes=1)
+    assert "mpiexec" not in s1 and "ch-run /img" in s1
+    s2 = slurm.render_script("j", "/img", "python", nodes=16)
+    assert "mpiexec -n 16 -ppn 1 ch-run /img" in s2

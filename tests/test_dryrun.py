@@ -1,0 +1,88 @@
+"""Dry-run integration tests (slow: real XLA compiles in a subprocess with
+512 host devices).  The full 40-pair x 2-mesh sweep runs via
+``python -m repro.launch.dryrun --all --both-meshes``; here we gate a
+representative slice in CI."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+PAIRS = [
+    ("qwen2-0.5b", "train_4k"),        # dense train
+    ("dbrx-132b", "decode_32k"),       # MoE decode, seq-sharded cache
+    ("mamba2-1.3b", "long_500k"),      # SSM long-context decode
+    ("whisper-small", "prefill_32k"),  # enc-dec prefill
+]
+
+
+def _run_dryrun(args, timeout=560):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, env=env, cwd="/root/repo",
+        timeout=timeout)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", PAIRS)
+def test_dryrun_pair_compiles(arch, shape, tmp_path):
+    out = tmp_path / "rec.jsonl"
+    r = _run_dryrun(["--arch", arch, "--shape", shape, "--json", str(out)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["flops"] > 0 and rec["chips"] == 256
+    # fits a 16 GiB-HBM chip: arguments + scheduled peak
+    assert rec["argument_size"] < 16 * 2**30
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_compiles(tmp_path):
+    out = tmp_path / "rec.jsonl"
+    r = _run_dryrun(["--arch", "qwen2-0.5b", "--shape", "decode_32k",
+                     "--multi-pod", "--json", str(out)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok" and rec["chips"] == 512
+
+
+@pytest.mark.slow
+def test_whisper_long500k_is_skipped(tmp_path):
+    out = tmp_path / "rec.jsonl"
+    r = _run_dryrun(["--arch", "whisper-small", "--shape", "long_500k",
+                     "--json", str(out)])
+    assert r.returncode == 0
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "skip"
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), dimensions={0}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs.1 = f32[8,32]{1,0} reduce-scatter(f32[64,32]{1,0} %z), dimensions={0}
+  %done = f32[4]{0} all-gather-done(f32[4]{0} %start)
+    """
+    b = collective_bytes(hlo)
+    assert b["all-gather"] == 16 * 1024 * 2
+    assert b["all-reduce"] == 256 * 4
+    assert b["reduce-scatter"] == 8 * 32 * 4
+
+
+def test_sweep_results_if_present():
+    """Validate the committed full-sweep results: 80 records, 0 failures,
+    every ok record fits HBM on arguments."""
+    path = "/root/repo/results/dryrun_all.jsonl"
+    if not os.path.exists(path):
+        pytest.skip("full sweep results not generated yet")
+    recs = [json.loads(l) for l in open(path)]
+    assert len(recs) == 80
+    assert sum(r["status"] == "fail" for r in recs) == 0
+    ok = [r for r in recs if r["status"] == "ok"]
+    assert len(ok) == 78                      # 2 documented whisper skips
+    for r in ok:
+        assert r["argument_size"] < 16 * 2**30, (r["arch"], r["shape"])

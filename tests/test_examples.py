@@ -1,0 +1,55 @@
+"""Example scripts and launchers run end-to-end (subprocess integration)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(args, timeout=540):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, *args], capture_output=True,
+                          text=True, env=env, cwd="/root/repo",
+                          timeout=timeout)
+
+
+@pytest.mark.slow
+def test_quickstart():
+    r = _run(["examples/quickstart.py"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "DOWN" in r.stdout
+    assert "capsule run complete" in r.stdout
+
+
+@pytest.mark.slow
+def test_deploy_supermuc():
+    r = _run(["examples/deploy_supermuc.py"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "BROKEN tensorflow" in r.stdout
+    assert "charliecloud: ADMITTED" in r.stdout
+    assert "mpiexec -n 32" in r.stdout
+
+
+@pytest.mark.slow
+def test_train_launcher_smoke():
+    r = _run(["-m", "repro.launch.train", "--arch", "qwen2-0.5b", "--smoke",
+              "--steps", "8", "--seq-len", "64", "--global-batch", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "loss" in r.stdout
+
+
+@pytest.mark.slow
+def test_serve_launcher_smoke():
+    r = _run(["-m", "repro.launch.serve", "--arch", "mamba2-1.3b", "--smoke",
+              "--requests", "2", "--max-new", "4", "--greedy"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tok/s" in r.stdout
+
+
+@pytest.mark.slow
+def test_train_lm_example_short():
+    r = _run(["examples/train_lm.py", "--model", "tiny", "--steps", "25",
+              "--seq-len", "64", "--batch", "8", "--ckpt-every", "0"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "DOWN" in r.stdout

@@ -1,0 +1,96 @@
+"""3DGAN (the paper's workload) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.data import CalorimeterSpec, generate_batch
+from repro.models import gan3d as G
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return G.GAN3DConfig(g_fc_ch=6, g_base=16, d_base=8)   # fast variant
+
+
+def test_parameter_budget():
+    full = G.GAN3DConfig()
+    gp = G.init_generator(jax.random.PRNGKey(0), full)
+    dp = G.init_discriminator(jax.random.PRNGKey(1), full)
+    total = G.param_count(gp) + G.param_count(dp)
+    assert 0.8e6 < total < 1.3e6      # paper: "slightly less than 1 million"
+
+
+def test_generator_output_properties(cfg, rng_key):
+    gp = G.init_generator(rng_key, cfg)
+    z = jax.random.normal(rng_key, (4, cfg.latent_dim))
+    e = jnp.asarray([50.0, 150.0, 300.0, 450.0])
+    img = G.generator(gp, cfg, z, e)
+    assert img.shape == (4, 25, 25, 25, 1)
+    assert float(img.min()) >= 0.0                   # energies non-negative
+    totals = np.asarray(jnp.sum(img, axis=(1, 2, 3, 4)))
+    assert totals[3] > totals[0]                     # conditioning monotone-ish
+
+
+def test_discriminator_heads(cfg, rng_key):
+    dp = G.init_discriminator(rng_key, cfg)
+    batch = generate_batch(CalorimeterSpec(), 4)
+    out = G.discriminator(dp, cfg, jnp.asarray(batch["images"]))
+    assert out["adv_logit"].shape == (4,)
+    assert (np.asarray(out["energy_pred"]) >= 0).all()
+
+
+def test_losses_finite_and_grads_flow(cfg, rng_key):
+    gp = G.init_generator(rng_key, cfg)
+    dp = G.init_discriminator(jax.random.fold_in(rng_key, 1), cfg)
+    batch = {k: jnp.asarray(v)
+             for k, v in generate_batch(CalorimeterSpec(), 4).items()}
+    z = jax.random.normal(rng_key, (4, cfg.latent_dim))
+    gd, m = jax.grad(G.d_loss, has_aux=True)(dp, gp, cfg, batch, z)
+    assert np.isfinite(float(m["d_loss"]))
+    assert float(optim.global_norm(gd)) > 0
+    gg, mg = jax.grad(G.g_loss, has_aux=True)(gp, dp, cfg, batch, z)
+    assert np.isfinite(float(mg["g_loss"]))
+    assert float(optim.global_norm(gg)) > 0
+
+
+def test_d_stop_gradient_isolates_generator(cfg, rng_key):
+    """d_loss must NOT backprop into the generator."""
+    gp = G.init_generator(rng_key, cfg)
+    dp = G.init_discriminator(jax.random.fold_in(rng_key, 1), cfg)
+    batch = {k: jnp.asarray(v)
+             for k, v in generate_batch(CalorimeterSpec(), 2).items()}
+    z = jax.random.normal(rng_key, (2, cfg.latent_dim))
+    g_wrt_g = jax.grad(lambda g_: G.d_loss(dp, g_, cfg, batch, z)[0])(gp)
+    assert float(optim.global_norm(g_wrt_g)) == 0.0
+
+
+def test_short_training_moves_losses(cfg, rng_key):
+    gp = G.init_generator(rng_key, cfg)
+    dp = G.init_discriminator(jax.random.fold_in(rng_key, 1), cfg)
+    d_opt = optim.rmsprop(1e-3)
+    g_opt = optim.rmsprop(1e-3)
+    ds, gs = d_opt.init(dp), g_opt.init(gp)
+
+    @jax.jit
+    def step(dp, ds, gp, gs, batch, z):
+        gd, dm = jax.grad(G.d_loss, has_aux=True)(dp, gp, cfg, batch, z)
+        du, ds = d_opt.update(gd, ds, dp)
+        dp = optim.apply_updates(dp, du)
+        gg, gm = jax.grad(G.g_loss, has_aux=True)(gp, dp, cfg, batch, z)
+        gu, gs = g_opt.update(gg, gs, gp)
+        gp = optim.apply_updates(gp, gu)
+        return dp, ds, gp, gs, dm, gm
+
+    key = rng_key
+    d0 = None
+    for i in range(6):
+        batch = {k: jnp.asarray(v)
+                 for k, v in generate_batch(CalorimeterSpec(), 4, i).items()}
+        key, kz = jax.random.split(key)
+        z = jax.random.normal(kz, (4, cfg.latent_dim))
+        dp, ds, gp, gs, dm, gm = step(dp, ds, gp, gs, batch, z)
+        if d0 is None:
+            d0 = float(dm["d_loss"])
+    assert float(dm["d_loss"]) < d0        # D learns real vs fake quickly

@@ -1,0 +1,53 @@
+"""The paper's §II-A dependency story, executable."""
+import pytest
+
+from repro.core import registry as R
+
+
+def test_version_parsing():
+    assert R.parse_version("1.11.0") == (1, 11, 0)
+    assert R.parse_version("2.6") == (2, 6, 0)
+    c = R.Constraint.parse(">=3.6.0")
+    assert c.satisfied_by((3, 6, 1)) and not c.satisfied_by((3, 5, 9))
+
+
+def test_resolver_picks_consistent_set():
+    idx = R.default_index()
+    sol = R.Resolver(idx).resolve(["tensorflow==1.11.0", "horovod>=0.15.0"])
+    assert sol["tensorflow"].version == "1.11.0"
+    assert sol["protobuf"].vtuple >= (3, 6, 0)
+    assert "six" in sol and "numpy" in sol
+
+
+def test_conflicting_roots_unresolvable_in_one_env():
+    idx = R.default_index()
+    with pytest.raises(R.ResolutionError):
+        R.Resolver(idx).resolve(["tensorflow==1.11.0", "caffe==1.0.0"])
+
+
+def test_paper_tf_then_caffe_breakage():
+    """Installing Caffe after TensorFlow downgrades protobuf and breaks TF —
+    the exact §II-A scenario."""
+    idx = R.default_index()
+    env = R.SharedEnvironment(idx)
+    env.pip_install("tensorflow==1.11.0")
+    assert env.check() == {}
+    env.pip_install("caffe==1.0.0")
+    problems = env.check()
+    assert "tensorflow==1.11.0" in problems
+    assert any("protobuf" in p for p in problems["tensorflow==1.11.0"])
+
+
+def test_per_image_resolution_fixes_it():
+    idx = R.default_index()
+    r = R.Resolver(idx)
+    tf_image = r.resolve(["tensorflow==1.11.0"])
+    caffe_image = r.resolve(["caffe==1.0.0"])
+    assert tf_image["protobuf"].vtuple >= (3, 6, 0)
+    assert caffe_image["protobuf"].version == "2.6.1"
+
+
+def test_offline_fetch_raises():
+    idx = R.PackageIndex()
+    with pytest.raises(R.OfflineViolation):
+        R.Resolver(idx).resolve(["pandas>=1.0.0"])

@@ -1,0 +1,232 @@
+"""Optimizers, schedules, checkpointing, data pipelines, serving."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro import checkpoint as ck
+from repro import optim
+from repro.data import (CalorimeterSpec, CalorimeterSource,
+                        SyntheticTokenSource, TokenDatasetSpec, generate_batch)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quadratic(params):
+    return sum(jnp.sum(jnp.square(p)) for p in jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("sgd", {}), ("sgd", {"momentum": 0.9}), ("rmsprop", {}),
+    ("adam", {}), ("adamw", {"weight_decay": 0.01})])
+def test_optimizers_minimize_quadratic(name, kw):
+    opt = optim.get(name, 0.05, **kw)
+    params = {"a": jnp.ones((4,)), "b": jnp.full((2, 3), -2.0)}
+    state = opt.init(params)
+    v0 = float(_quadratic(params))
+    for _ in range(100):
+        g = jax.grad(_quadratic)(params)
+        upd, state = opt.update(g, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(_quadratic(params)) < 0.05 * v0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert abs(float(optim.global_norm(clipped)) - 1.0) < 1e-4
+    assert abs(float(norm) - np.sqrt(1000.0)) < 1e-2
+    small = {"a": jnp.full((4,), 0.01)}
+    c2, _ = optim.clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.01, rtol=1e-5)
+
+
+def test_warmup_cosine_schedule():
+    s = optim.schedules.warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert abs(float(s(jnp.asarray(10))) - 1.0) < 1e-5
+    assert float(s(jnp.asarray(100))) < 1e-3
+    assert float(s(jnp.asarray(55))) < float(s(jnp.asarray(20)))
+
+
+def test_bf16_grads_accumulate_in_f32():
+    opt = optim.adamw(1e-2)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    g = {"w": jnp.full((4,), 1e-3, jnp.bfloat16)}
+    upd, state = opt.update(g, state, params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    assert upd["w"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_rotation(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "count": jnp.asarray(7)}
+    for step in (1, 2, 3, 4, 5):
+        ck.save(tmp_path, step, tree, keep=3)
+    assert ck.latest_step(tmp_path) == 5
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert len(kept) == 3 and kept[0] == "step_000000003"
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    back = ck.restore(tmp_path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    ck.save(tmp_path, 1, {"a": jnp.ones(3)})
+    with pytest.raises(KeyError):
+        ck.restore(tmp_path, {"a": jax.ShapeDtypeStruct((3,), jnp.float32),
+                              "extra": jax.ShapeDtypeStruct((2,), jnp.float32)})
+
+
+def test_checkpoint_manifest(tmp_path):
+    ck.save(tmp_path, 3, {"w": jnp.zeros((2, 2))}, extra={"loss": 1.5})
+    m = ck.manifest(tmp_path)
+    assert m["step"] == 3 and m["extra"]["loss"] == 1.5
+    assert m["leaves"]["w"]["shape"] == [2, 2]
+
+
+# ---------------------------------------------------------------------------
+# data pipelines
+# ---------------------------------------------------------------------------
+
+def test_token_source_determinism_and_sharding():
+    spec = TokenDatasetSpec(vocab_size=97, seq_len=32, global_batch=8)
+    s0 = SyntheticTokenSource(spec, rank=0, world_size=2)
+    s1 = SyntheticTokenSource(spec, rank=1, world_size=2)
+    b0a, b0b = s0.batch(5), s0.batch(5)
+    np.testing.assert_array_equal(b0a["tokens"], b0b["tokens"])
+    assert s0.local_batch == 4
+    assert not np.array_equal(s0.batch(5)["tokens"], s1.batch(5)["tokens"])
+    assert b0a["tokens"].max() < 97 and b0a["tokens"].min() >= 0
+
+
+def test_token_source_learnable_structure():
+    """next-token follows the permutation table > noise of the time."""
+    spec = TokenDatasetSpec(vocab_size=50, seq_len=256, global_batch=4,
+                            noise=0.2)
+    s = SyntheticTokenSource(spec)
+    b = s.batch(0)["tokens"]
+    follows = (s._table[b[:, :-1]] == b[:, 1:]).mean()
+    assert follows > 0.6
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.sampled_from([2, 4, 8]), step=st.integers(0, 100))
+def test_calorimeter_physics(batch, step):
+    b = generate_batch(CalorimeterSpec(), batch, step)
+    img, e = b["images"], b["energies"]
+    assert img.shape == (batch, 25, 25, 25, 1)
+    assert (img >= 0).all()
+    totals = img.sum((1, 2, 3, 4))
+    # total deposition grows with primary energy
+    if batch >= 4:
+        corr = np.corrcoef(e, totals)[0, 1]
+        assert corr > 0.8
+    # lateral profile peaks at the center
+    core = img[:, 12, 12, :, 0].sum(-1)
+    edge = img[:, 0, 0, :, 0].sum(-1)
+    assert (core > edge).all()
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_serving_engine_greedy_deterministic(rng_key):
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving import Request, SamplingParams, ServingEngine
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = T.init_params(cfg, rng_key)
+    eng = ServingEngine(cfg, params, max_seq_len=48, max_slots=2)
+    prompt = np.array([1, 2, 3, 4], np.int32)
+    sp = SamplingParams(max_new_tokens=6, greedy=True)
+    o1 = eng.generate([Request(prompt, sp)])[0]
+    o2 = eng.generate([Request(prompt, sp)])[0]
+    np.testing.assert_array_equal(o1, o2)
+    assert len(o1) == 6 and (o1 < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# sharded dataset (the paper's HDF5-on-GPFS analogue)
+# ---------------------------------------------------------------------------
+
+def test_sharded_dataset_roundtrip_and_rank_split(tmp_path):
+    from repro.data.shards import ShardedDataset, write_dataset
+
+    def gen():
+        for step in range(10):
+            b = generate_batch(CalorimeterSpec(), 64, step)
+            yield b
+
+    path = write_dataset(tmp_path / "calo", gen(), events_per_shard=128)
+    ds0 = ShardedDataset(path, rank=0, world_size=2)
+    ds1 = ShardedDataset(path, rank=1, world_size=2)
+    assert ds0.verify() and ds1.verify()
+    assert ds0.local_events + ds1.local_events == 640
+    files0 = {s["file"] for s in ds0.my_shards}
+    files1 = {s["file"] for s in ds1.my_shards}
+    assert not files0 & files1                      # disjoint rank subsets
+
+    batches = list(ds0.epoch(0, batch_size=50))
+    assert all(b["images"].shape == (50, 25, 25, 25, 1) for b in batches)
+    assert sum(len(b["energies"]) for b in batches) <= ds0.local_events
+    # deterministic per (seed, epoch, rank)
+    b2 = list(ds0.epoch(0, batch_size=50))
+    np.testing.assert_array_equal(batches[0]["energies"], b2[0]["energies"])
+    # different epoch shuffles differently
+    b3 = list(ds0.epoch(1, batch_size=50))
+    assert not np.array_equal(batches[0]["energies"], b3[0]["energies"])
+
+
+def test_sharded_dataset_detects_corruption(tmp_path):
+    from repro.data.shards import ShardedDataset, write_dataset
+
+    def gen():
+        yield {"x": np.arange(32, dtype=np.float32)}
+
+    path = write_dataset(tmp_path / "d", gen(), events_per_shard=16)
+    ds = ShardedDataset(path)
+    shard_file = path / ds.my_shards[0]["file"]
+    shard_file.write_bytes(shard_file.read_bytes()[:-1] + b"X")
+    with pytest.raises(IOError, match="corrupt"):
+        ds.verify()
+
+
+def test_serving_engine_encdec_whisper(rng_key):
+    """enc-dec (whisper) serving: encoder runs once, decoder streams."""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving import Request, SamplingParams, ServingEngine
+    cfg = get_smoke_config("whisper-small")
+    params = T.init_params(cfg, rng_key)
+    eng = ServingEngine(cfg, params, max_seq_len=32, max_slots=2)
+    rng = np.random.default_rng(0)
+    reqs = [Request(np.array([1], np.int32),
+                    SamplingParams(max_new_tokens=5, greedy=True),
+                    encoder_input=rng.normal(
+                        size=(cfg.encoder_seq, cfg.d_model)).astype(np.float32))
+            for _ in range(2)]
+    outs = eng.generate(reqs)
+    assert all(len(o) == 5 and (o < cfg.vocab_size).all() for o in outs)
+    # different audio -> different transcription (encoder matters)
+    reqs2 = [Request(np.array([1], np.int32),
+                     SamplingParams(max_new_tokens=5, greedy=True),
+                     encoder_input=rng.normal(
+                         size=(cfg.encoder_seq, cfg.d_model)).astype(np.float32) * 3)
+             for _ in range(2)]
+    outs2 = eng.generate(reqs2)
+    assert not all(np.array_equal(a, b) for a, b in zip(outs, outs2))
