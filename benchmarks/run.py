@@ -82,7 +82,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", help="comma list: scaling,overhead,ps,physics,"
-                                   "roofline,kernels")
+                                   "roofline,kernels,serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -118,6 +118,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append(("kernels/FAILED", 0.0, "see stderr"))
+    if want("serving"):
+        from benchmarks import serving_throughput
+        try:
+            rows += serving_throughput.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("serving/FAILED", 0.0, "see stderr"))
     if want("physics"):
         from benchmarks import physics_validation
         try:

@@ -1,6 +1,7 @@
 """Batched serving example: the ``serve_step`` program from the dry-run,
-executed for real through the ServingEngine (prefill via scanned decode,
-continuous batched sampling).
+executed for real through the continuous-batching scheduler
+(``engine.generate`` routes each request through per-slot prefill, the
+paged KV pool, and per-request sampling — see ``repro/serving/``).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b
 """

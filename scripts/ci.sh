@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# One-invocation verify recipe: the repo's tier-1 test command (ROADMAP.md).
+# Usage: scripts/ci.sh [extra pytest args]
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

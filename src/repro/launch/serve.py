@@ -1,12 +1,22 @@
 """Production serving launcher (in-capsule entrypoint).
 
+Routes requests through the continuous-batching scheduler: admission
+queue -> per-slot prefill -> batched decode with per-request sampling ->
+early exit on each request's own ``max_new_tokens`` / EOS.  Prints
+per-request outputs plus TTFT / throughput telemetry, and can fan out
+over multiple engine replicas (``--replicas``, each conceptually one
+``ch-run`` capsule) behind the least-loaded gateway.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \\
-      --requests 4 --max-new 16
+      --requests 8 --max-new 16
+
+Add ``--metrics-json PATH`` to export the scheduler telemetry for the
+benchmark harness.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 
 def main(argv=None):
@@ -16,7 +26,12 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq-len", type=int, default=128)
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="continuous-batching slots per replica")
+    ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--greedy", action="store_true")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--metrics-json", default=None)
     args = ap.parse_args(argv)
 
     import jax
@@ -24,27 +39,43 @@ def main(argv=None):
 
     from repro.configs import get_config, get_smoke_config
     from repro.models import transformer as T
-    from repro.serving import Request, SamplingParams, ServingEngine
+    from repro.serving import (ReplicaGateway, Request, SamplingParams,
+                               ServingEngine)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encdec":
         raise SystemExit("serve launcher targets decoder LMs")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, max_seq_len=args.max_seq_len,
-                           max_slots=args.requests)
+    engines = [ServingEngine(cfg, params, max_seq_len=args.max_seq_len,
+                             max_slots=args.max_slots, rng_seed=r)
+               for r in range(args.replicas)]
+    gateway = ReplicaGateway.from_engines(engines)
+
     rng = np.random.default_rng(0)
-    reqs = [Request(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 12)),
-                                 dtype=np.int32),
-                    SamplingParams(max_new_tokens=args.max_new,
-                                   greedy=args.greedy))
-            for _ in range(args.requests)]
-    t0 = time.time()
-    outs = engine.generate(reqs)
-    dt = time.time() - t0
-    n = sum(len(o) for o in outs)
-    for i, o in enumerate(outs):
-        print(f"req {i}: {o.tolist()}")
-    print(f"{n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+    handles = [gateway.submit(Request(
+        rng.integers(0, cfg.vocab_size, int(rng.integers(4, 12)),
+                     dtype=np.int32),
+        SamplingParams(max_new_tokens=args.max_new, greedy=args.greedy,
+                       temperature=args.temperature)))
+        for _ in range(args.requests)]
+    gateway.drain()
+
+    for i, h in enumerate(handles):
+        rep = gateway.replicas[h[0]]
+        print(f"req {i} [{rep.name}]: {gateway.result(h).tolist()}")
+    stats = gateway.stats()
+    tot = stats["totals"]
+    print(f"{tot['total_new_tokens']} tokens over "
+          f"{tot['requests_completed']} requests on "
+          f"{tot['replicas']} replica(s): "
+          f"{tot['tokens_per_s']:.1f} tok/s, "
+          f"ttft p95 {tot['ttft_ms_p95']:.1f} ms, "
+          f"latency p95 {tot['latency_ms_p95']:.1f} ms, "
+          f"slot occupancy {tot['slot_occupancy']:.2f}")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(stats, f, indent=2, sort_keys=True, default=str)
+        print(f"metrics -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

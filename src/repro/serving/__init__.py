@@ -1,1 +1,7 @@
-from repro.serving.engine import Request, SamplingParams, ServingEngine, make_serve_step
+from repro.serving.engine import (Request, SamplingParams, ServingEngine,
+                                  make_serve_step)
+from repro.serving.gateway import (CapsuleReplica, ReplicaGateway,
+                                   launch_capsule_replicas)
+from repro.serving.kvcache import KVBlockPool, OutOfBlocks, PagedKVCache
+from repro.serving.metrics import ServingMetrics, merge_summaries
+from repro.serving.scheduler import Scheduler

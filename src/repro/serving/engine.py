@@ -1,23 +1,36 @@
-"""Batched serving engine: KV-cache management, prefill, decode, sampling.
+"""Batched serving engine: slot-granular prefill/decode primitives.
 
 The serving counterpart of the deployment story: the same capsule image
-serves a model with batched requests.  The engine keeps one ragged batch of
-sequences; prefill replays prompt tokens through ``decode_step`` under a
-``lax.scan`` (compiled once), decode samples one token per step for every
-live sequence.  ``serve_step`` — one token against a seq_len cache — is the
-exact program the decode dry-run shapes lower.
+serves a model with continuously batched requests.  The engine owns the
+pooled decode cache (a :class:`~repro.serving.kvcache.PagedKVCache` over
+``max_slots`` sequences) and exposes the two primitives the scheduler
+drives:
+
+* ``prefill_into_slot`` — replay one prompt through ``decode_step`` under
+  a ``lax.scan`` at batch 1, scatter the resulting cache into a freed
+  slot, and return the last-token logits (the first sample comes from
+  these, so TTFT is one prefill, not one full decode round).
+* ``decode_once`` — one token for every slot against the pooled cache;
+  ``serve_step`` here is the exact program the decode dry-run shapes
+  lower.
+
+Sampling is vectorized per slot (``sample_tokens``): each row gets its own
+temperature / greedy flag, fixing the seed bug where ``requests[0].params``
+was applied to the whole batch.  ``generate()`` survives as a thin
+compatibility wrapper that routes through the continuous-batching
+scheduler.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.serving.kvcache import PagedKVCache
 
 
 @dataclass
@@ -25,6 +38,7 @@ class SamplingParams:
     temperature: float = 1.0
     greedy: bool = False
     max_new_tokens: int = 32
+    eos_token: Optional[int] = None      # early-exit on this token id
 
 
 @dataclass
@@ -48,12 +62,16 @@ class ServingEngine:
     """Fixed-slot batched engine (continuous batching over ``max_slots``)."""
 
     def __init__(self, cfg, params, max_seq_len: int, max_slots: int = 8,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, kv_block_size: int = 16):
         self.cfg = cfg
         self.params = params
         self.max_seq_len = max_seq_len
         self.max_slots = max_slots
         self.key = jax.random.PRNGKey(rng_seed)
+        self.kv = PagedKVCache(cfg, max_slots, max_seq_len,
+                               block_size=kv_block_size)
+        self.decode_steps = 0                # accounting (tested)
+        self.prefill_tokens = 0
         self._step = jax.jit(make_serve_step(cfg))
 
         def prefill(params, tokens, cache, encoder_output):
@@ -74,45 +92,81 @@ class ServingEngine:
             return cache, pos, logits[-1]
 
         self._prefill = jax.jit(prefill)
+
+        def sample(key, logits, temps, greedy):
+            cat = jax.random.categorical(key, logits / temps[:, None])
+            return jnp.where(greedy, jnp.argmax(logits, axis=-1), cat)
+
+        self._sample_vec = jax.jit(sample)
+
+        self._enc_pool = None
         if cfg.family == "encdec":
             self._encode = jax.jit(
                 lambda params, frames: T._encode(params["encoder"], cfg,
                                                  frames))
+            self._enc_pool = jnp.zeros(
+                (max_slots, cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.dtype))
 
-    def _sample(self, logits, sp: SamplingParams):
-        if sp.greedy:
-            return jnp.argmax(logits, axis=-1)
+    # -- scheduler-facing primitives ----------------------------------------
+
+    def prefill_into_slot(self, prompt: np.ndarray,
+                          encoder_input: Optional[np.ndarray] = None,
+                          ) -> Tuple[int, np.ndarray]:
+        """Prefill one prompt into a free slot of the pooled cache.
+
+        Returns ``(slot, last_logits (V,))`` — the scheduler samples the
+        first new token from these logits, so admission costs one prefill
+        and the request joins the very next decode round.
+        """
+        prompt = np.asarray(prompt, np.int32)
+        slot = self.kv.alloc_slot(len(prompt))
+        enc1 = None
+        if self.cfg.family == "encdec":
+            enc1 = self._encode(self.params,
+                                jnp.asarray(encoder_input)[None])
+            self._enc_pool = self._enc_pool.at[slot].set(enc1[0])
+        cache1 = T.init_cache(self.cfg, 1, self.max_seq_len)
+        cache1, _, last_logits = self._prefill(
+            self.params, jnp.asarray(prompt)[None], cache1, enc1)
+        self.kv.write_prefill(slot, cache1)
+        self.prefill_tokens += len(prompt)
+        return slot, np.asarray(last_logits[0])
+
+    def decode_once(self, tokens: np.ndarray,
+                    positions: np.ndarray) -> np.ndarray:
+        """One decode step over all slots.  ``tokens``/``positions`` are
+        (max_slots,); rows for free slots carry dummies (their cache
+        writes land in region the next prefill overwrites).  Returns
+        logits (max_slots, V)."""
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[:, None],
+                 "positions": jnp.asarray(positions, jnp.int32),
+                 "cache": self.kv.cache}
+        if self._enc_pool is not None:
+            batch["encoder_output"] = self._enc_pool
+        logits, self.kv.cache = self._step(self.params, batch)
+        self.decode_steps += 1
+        return np.asarray(logits[:, 0])
+
+    def sample_tokens(self, logits: np.ndarray, temps: np.ndarray,
+                      greedy: np.ndarray) -> np.ndarray:
+        """Per-row sampling: row i uses temps[i] / greedy[i]."""
         self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / max(sp.temperature, 1e-4))
+        return np.asarray(self._sample_vec(
+            sub, jnp.asarray(logits),
+            jnp.maximum(jnp.asarray(temps, jnp.float32), 1e-4),
+            jnp.asarray(greedy)))
+
+    def free_slot(self, slot: int) -> None:
+        self.kv.free_slot(slot)
+
+    # -- compatibility wrapper ----------------------------------------------
 
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
-        """Serve a batch of requests (padded to equal prompt length)."""
-        assert len(requests) <= self.max_slots
-        B = len(requests)
-        P = max(len(r.prompt) for r in requests)
-        prompts = np.zeros((B, P), np.int32)
-        for i, r in enumerate(requests):
-            prompts[i, P - len(r.prompt):] = r.prompt      # left-pad
-        enc_out = None
-        if self.cfg.family == "encdec":
-            frames = jnp.stack([jnp.asarray(r.encoder_input)
-                                for r in requests])
-            enc_out = self._encode(self.params, frames)
-        cache = T.init_cache(self.cfg, B, self.max_seq_len)
-        cache, pos, last_logits = self._prefill(self.params,
-                                                jnp.asarray(prompts), cache,
-                                                enc_out)
-        max_new = max(r.params.max_new_tokens for r in requests)
-        outs = []
-        tok = self._sample(last_logits, requests[0].params)
-        for _ in range(max_new):
-            outs.append(tok)
-            batch = {"tokens": tok[:, None], "positions": pos,
-                     "cache": cache}
-            if enc_out is not None:
-                batch["encoder_output"] = enc_out
-            logits, cache = self._step(self.params, batch)
-            pos = pos + 1
-            tok = self._sample(logits[:, 0], requests[0].params)
-        gen = np.stack([np.asarray(o) for o in outs], axis=1)    # (B, new)
-        return [gen[i, :requests[i].params.max_new_tokens] for i in range(B)]
+        """Serve a batch of requests through the scheduler path and return
+        generated tokens in submission order."""
+        from repro.serving.scheduler import Scheduler
+        sched = Scheduler(self)
+        rids = [sched.submit(r) for r in requests]
+        sched.run()
+        return [sched.output(rid) for rid in rids]

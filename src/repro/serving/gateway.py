@@ -1,0 +1,134 @@
+"""Multi-replica serving gateway: least-loaded dispatch + graceful drain.
+
+Scale-out layer of the serving story.  Each replica is one
+:class:`~repro.serving.scheduler.Scheduler` over one engine — conceptually
+one ``ch-run`` capsule instance of the same immutable image, the way the
+paper's deployment runs one containerized process per allocation.  The
+gateway front-ends N replicas:
+
+* ``submit`` routes each request to the replica with the smallest load
+  (queue depth + live slots);
+* ``step`` advances every replica one decode round (single-host stand-in
+  for replicas running concurrently on their own nodes);
+* ``drain`` closes admission and runs every replica until all in-flight
+  requests complete — the graceful-shutdown path a rolling image update
+  needs (the capsule is immutable, so an update is drain + relaunch).
+
+``launch_capsule_replicas`` builds the engines *inside* ``ch-run``
+launches via :class:`~repro.core.container.CapsuleRuntime`, recording the
+per-replica capsule bookkeeping (image, uid map, scrubbed env) on the
+handle; unit tests may also construct replicas from bare engines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.metrics import merge_summaries
+from repro.serving.scheduler import Scheduler
+
+
+@dataclass
+class CapsuleReplica:
+    """One serving replica + its launch bookkeeping."""
+    name: str
+    scheduler: Scheduler
+    capsule: Optional[Dict[str, Any]] = None   # image/uid_map/env of ch-run
+    routed: int = 0
+
+    @property
+    def load(self) -> int:
+        return self.scheduler.load
+
+
+class ReplicaGateway:
+    """Least-loaded request router over N scheduler replicas."""
+
+    def __init__(self, replicas: List[CapsuleReplica]):
+        assert replicas, "gateway needs at least one replica"
+        self.replicas = replicas
+        self.draining = False
+
+    @classmethod
+    def from_engines(cls, engines: List[ServingEngine],
+                     **sched_kw) -> "ReplicaGateway":
+        return cls([CapsuleReplica(f"replica{i}", Scheduler(e, **sched_kw))
+                    for i, e in enumerate(engines)])
+
+    # -- routing -------------------------------------------------------------
+
+    def submit(self, request: Request) -> Tuple[int, int]:
+        """Route to the least-loaded replica; returns a (replica, rid)
+        handle usable with :meth:`result`."""
+        if self.draining:
+            raise RuntimeError("gateway is draining; admission closed")
+        idx = min(range(len(self.replicas)),
+                  key=lambda i: (self.replicas[i].load, i))
+        rep = self.replicas[idx]
+        rep.routed += 1
+        return idx, rep.scheduler.submit(request)
+
+    # -- progress ------------------------------------------------------------
+
+    def step(self) -> bool:
+        """One decode round on every replica with work."""
+        progressed = False
+        for rep in self.replicas:
+            if rep.scheduler.has_work:
+                progressed = rep.scheduler.step() or progressed
+        return progressed
+
+    @property
+    def has_work(self) -> bool:
+        return any(r.scheduler.has_work for r in self.replicas)
+
+    def run(self) -> None:
+        while self.has_work:
+            self.step()
+
+    def drain(self) -> None:
+        """Graceful drain: no new admissions, all in-flight complete."""
+        self.draining = True
+        for rep in self.replicas:
+            rep.scheduler.draining = True
+        self.run()
+
+    # -- results / telemetry -------------------------------------------------
+
+    def result(self, handle: Tuple[int, int]) -> np.ndarray:
+        idx, rid = handle
+        return self.replicas[idx].scheduler.output(rid)
+
+    def stats(self) -> Dict[str, Any]:
+        summaries = [rep.scheduler.metrics.summary() for rep in self.replicas]
+        per = {rep.name: {**s, "routed": rep.routed, "capsule": rep.capsule}
+               for rep, s in zip(self.replicas, summaries)}
+        return {"replicas": per, "totals": merge_summaries(summaries)}
+
+
+def launch_capsule_replicas(
+        n: int, engine_factory: Callable[[], ServingEngine], work_dir,
+        image_definition=None) -> Tuple[ReplicaGateway, Any]:
+    """Deploy one immutable image and launch ``n`` serving replicas from
+    it, each engine constructed inside a ``CapsuleRuntime.run`` (the
+    ``ch-run`` analogue) so the launch bookkeeping — image hash, uid map,
+    scrubbed env — is recorded per replica.  Returns (gateway, deployment).
+    """
+    from repro.core import deploy as D
+
+    pipe = D.DeploymentPipeline()
+    definition = image_definition or D.intel_tensorflow_image(
+        "serving-replica")
+    dep = pipe.deploy(definition, Path(work_dir))
+    replicas = []
+    for r in range(n):
+        res = dep.run(engine_factory, ranks=1)[0]
+        replicas.append(CapsuleReplica(
+            f"replica{r}", Scheduler(res.value),
+            capsule={"image": res.image, "uid_map": res.uid_map,
+                     "env": res.env, "wall_time_s": res.wall_time_s}))
+    return ReplicaGateway(replicas), dep

@@ -1,0 +1,191 @@
+"""Paged KV-cache pool: block accounting + slot-resident cache storage.
+
+The physical decode cache stays in the model's dense layout — one
+``init_cache`` tree with a ``max_slots`` batch axis, because ``decode_step``
+is jitted over fixed shapes.  What this module adds is the *paging layer*
+a production server needs on top of that storage:
+
+* ``KVBlockPool`` — a fixed budget of KV blocks (``block_size`` token
+  positions each) handed out from a free list with ring-buffer semantics:
+  blocks freed by a finished sequence go to the tail and are recycled from
+  the head, so a retired request's memory is immediately reusable by the
+  next admission.  Double-allocation and double-free are hard errors.
+* ``PagedKVCache`` — per-slot block tables mapping each live sequence to
+  the blocks backing its token positions, grown one block at a time as the
+  sequence decodes, plus the scatter that writes a freshly prefilled
+  single-sequence cache into its slot of the pooled tree.
+
+Families without a growing attention cache (pure SSM) still run through
+the same ledger: their physical state is constant-size, but the block
+table models the logical KV footprint the scheduler admits against, so
+occupancy telemetry is comparable across model families.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+class OutOfBlocks(RuntimeError):
+    """KV pool exhausted — admission must wait for a sequence to finish."""
+
+
+class KVBlockPool:
+    """Fixed-size pool of KV blocks with free-list recycling."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = deque(range(num_blocks))
+        self._in_use: set = set()
+        self.high_water = 0
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._in_use)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfBlocks(
+                f"all {self.num_blocks} KV blocks in use")
+        b = self._free.popleft()
+        assert b not in self._in_use, f"block {b} double-allocated"
+        self._in_use.add(b)
+        self.high_water = max(self.high_water, len(self._in_use))
+        return b
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert b in self._in_use, f"block {b} freed but not allocated"
+            self._in_use.remove(b)
+            self._free.append(b)          # ring: recycled oldest-freed first
+
+
+class PagedKVCache:
+    """Slot-resident pooled cache + per-slot block tables.
+
+    ``cache`` is the jitted-decode operand: the model's cache tree with a
+    ``max_slots`` batch axis.  ``write_prefill`` scatters a batch-1 cache
+    (a fresh prefill) into one slot; the per-leaf batch-axis index is
+    detected from the model's cache spec, so every family (dense, MoE,
+    VLM, SSM, hybrid, enc-dec) works unmodified.
+    """
+
+    def __init__(self, cfg, max_slots: int, max_seq_len: int,
+                 block_size: int = 16):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.block_size = block_size
+        blocks_per_slot = -(-max_seq_len // block_size)       # ceil
+        self.pool = KVBlockPool(max_slots * blocks_per_slot, block_size)
+        self.cache = T.init_cache(cfg, max_slots, max_seq_len)
+        self._free_slots = deque(range(max_slots))
+        self.block_table: Dict[int, List[int]] = {}
+        self.seq_len_of: Dict[int, int] = {}
+        self._axes = self._batch_axes(cfg, max_seq_len)
+        self._write = jax.jit(self._make_write(), donate_argnums=0)
+
+    # -- batch-axis detection ------------------------------------------------
+
+    @staticmethod
+    def _batch_axes(cfg, seq_len: int) -> List[int]:
+        """Per-leaf index of the batch axis, found by diffing the cache
+        spec at batch=1 vs batch=2 (leaf order matches the cache tree)."""
+        is_leaf = (lambda x: isinstance(x, tuple) and len(x) == 2
+                   and isinstance(x[0], tuple))
+        s1 = jax.tree.leaves(T._cache_struct(cfg, 1, seq_len), is_leaf=is_leaf)
+        s2 = jax.tree.leaves(T._cache_struct(cfg, 2, seq_len), is_leaf=is_leaf)
+        axes = []
+        for (sh1, _), (sh2, _) in zip(s1, s2):
+            diff = [i for i, (a, b) in enumerate(zip(sh1, sh2)) if a != b]
+            assert len(diff) == 1, (sh1, sh2)
+            axes.append(diff[0])
+        return axes
+
+    def _make_write(self):
+        axes = self._axes
+
+        def write(pooled, single, slot):
+            leaves_p, treedef = jax.tree.flatten(pooled)
+            leaves_s = jax.tree.leaves(single)
+            out = []
+            for lp, ls, ax in zip(leaves_p, leaves_s, axes):
+                lead = (slice(None),) * ax
+                out.append(lp.at[lead + (slot,)].set(ls[lead + (0,)]))
+            return jax.tree.unflatten(treedef, out)
+
+        return write
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    def _blocks_for(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.block_size))
+
+    def alloc_slot(self, prompt_len: int) -> int:
+        """Claim a slot and the blocks backing its prompt positions."""
+        if prompt_len > self.max_seq_len:
+            raise ValueError(
+                f"prompt ({prompt_len}) exceeds max_seq_len "
+                f"({self.max_seq_len})")
+        if not self._free_slots:
+            raise OutOfBlocks("no free slot")
+        slot = self._free_slots.popleft()
+        try:
+            blocks = [self.pool.alloc()
+                      for _ in range(self._blocks_for(prompt_len))]
+        except OutOfBlocks:
+            self._free_slots.appendleft(slot)
+            raise
+        self.block_table[slot] = blocks
+        self.seq_len_of[slot] = prompt_len
+        return slot
+
+    def ensure_capacity(self, slot: int, n_tokens: int) -> None:
+        """Back token positions [0, n_tokens) with blocks, growing the
+        slot's table from the shared pool as decode advances."""
+        if n_tokens > self.max_seq_len:
+            raise OutOfBlocks(
+                f"slot {slot}: {n_tokens} tokens exceeds max_seq_len "
+                f"({self.max_seq_len})")
+        table = self.block_table[slot]
+        while len(table) * self.block_size < n_tokens:
+            table.append(self.pool.alloc())
+        self.seq_len_of[slot] = max(self.seq_len_of[slot], n_tokens)
+
+    def free_slot(self, slot: int) -> None:
+        """Retire a sequence: its blocks go straight back on the ring."""
+        self.pool.free(self.block_table.pop(slot))
+        del self.seq_len_of[slot]
+        self._free_slots.append(slot)
+
+    def write_prefill(self, slot: int, single_cache) -> None:
+        """Scatter a batch-1 prefilled cache into ``slot`` of the pool."""
+        self.cache = self._write(self.cache, single_cache,
+                                 jnp.asarray(slot, jnp.int32))
+
+    # -- telemetry -----------------------------------------------------------
+
+    def occupancy(self) -> Dict[str, float]:
+        return {
+            "slots_in_use": self.max_slots - len(self._free_slots),
+            "max_slots": self.max_slots,
+            "blocks_in_use": self.pool.in_use,
+            "blocks_total": self.pool.num_blocks,
+            "block_high_water": self.pool.high_water,
+            "block_utilization": self.pool.in_use / self.pool.num_blocks,
+        }

@@ -1,0 +1,130 @@
+"""Serving telemetry: TTFT, throughput, queue depth, slot occupancy.
+
+Collected by the scheduler on every admission/decode/retire and exported
+as JSON for the benchmark harness (``BENCH_serving.json``).  Latency
+percentiles are computed over completed requests; gauge series (queue
+depth, slot occupancy) are sampled once per scheduler step.  The clock is
+injectable so tests can drive deterministic timings.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+def _pct(xs: List[float], q: float) -> float:
+    """Percentile by linear interpolation (numpy-free on purpose: callable
+    from inside a capsule without pulling the model stack)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    if len(s) == 1:
+        return s[0]
+    f = (len(s) - 1) * q
+    lo, hi = int(f), min(int(f) + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (f - lo)
+
+
+class ServingMetrics:
+    """Per-request timings + per-step gauges for one scheduler."""
+
+    def __init__(self, clock=time.perf_counter):
+        self.clock = clock
+        self._submit: Dict[int, float] = {}
+        self._first: Dict[int, float] = {}
+        self._finish: Dict[int, float] = {}
+        self._tokens: Dict[int, int] = {}
+        self._reasons: Dict[int, str] = {}
+        self.queue_depth: List[int] = []
+        self.active_slots: List[int] = []
+        self.max_slots: int = 0
+        self.decode_steps: int = 0
+
+    # -- recording -----------------------------------------------------------
+
+    def record_submit(self, rid: int) -> None:
+        self._submit[rid] = self.clock()
+
+    def record_first_token(self, rid: int) -> None:
+        self._first[rid] = self.clock()
+
+    def record_finish(self, rid: int, n_tokens: int, reason: str) -> None:
+        self._finish[rid] = self.clock()
+        self._tokens[rid] = n_tokens
+        self._reasons[rid] = reason
+
+    def sample_gauges(self, queue_depth: int, active: int,
+                      max_slots: int) -> None:
+        self.queue_depth.append(queue_depth)
+        self.active_slots.append(active)
+        self.max_slots = max_slots
+        self.decode_steps += 1
+
+    # -- reduction -----------------------------------------------------------
+
+    def ttft_s(self) -> List[float]:
+        return [self._first[r] - self._submit[r] for r in self._first
+                if r in self._submit]
+
+    def latency_s(self) -> List[float]:
+        return [self._finish[r] - self._submit[r] for r in self._finish
+                if r in self._submit]
+
+    def summary(self) -> Dict[str, object]:
+        ttft, lat = self.ttft_s(), self.latency_s()
+        total_tokens = sum(self._tokens.values())
+        span = ((max(self._finish.values()) - min(self._submit.values()))
+                if self._finish and self._submit else 0.0)
+        occ = (sum(self.active_slots) / (len(self.active_slots)
+                                         * max(self.max_slots, 1))
+               if self.active_slots else 0.0)
+        reasons: Dict[str, int] = {}
+        for r in self._reasons.values():
+            reasons[r] = reasons.get(r, 0) + 1
+        return {
+            "requests_completed": len(self._finish),
+            "total_new_tokens": total_tokens,
+            "tokens_per_s": total_tokens / span if span > 0 else 0.0,
+            "decode_steps": self.decode_steps,
+            "ttft_ms": {"p50": _pct(ttft, 0.5) * 1e3,
+                        "p95": _pct(ttft, 0.95) * 1e3,
+                        "mean": (sum(ttft) / len(ttft) * 1e3
+                                 if ttft else 0.0)},
+            "latency_ms": {"p50": _pct(lat, 0.5) * 1e3,
+                           "p95": _pct(lat, 0.95) * 1e3},
+            "queue_depth": {"mean": (sum(self.queue_depth)
+                                     / len(self.queue_depth)
+                                     if self.queue_depth else 0.0),
+                            "peak": max(self.queue_depth, default=0)},
+            "slot_occupancy": occ,
+            "finish_reasons": reasons,
+        }
+
+    def to_json(self, **extra) -> str:
+        return json.dumps({**self.summary(), **extra}, indent=2,
+                          sort_keys=True)
+
+    def export(self, path, **extra) -> Path:
+        path = Path(path)
+        path.write_text(self.to_json(**extra) + "\n")
+        return path
+
+
+def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
+    """Aggregate per-replica summaries into gateway-level totals."""
+    if not summaries:
+        return {}
+    total_tokens = sum(s["total_new_tokens"] for s in summaries)
+    return {
+        "replicas": len(summaries),
+        "requests_completed": sum(s["requests_completed"] for s in summaries),
+        "total_new_tokens": total_tokens,
+        "tokens_per_s": sum(s["tokens_per_s"] for s in summaries),
+        "decode_steps": sum(s["decode_steps"] for s in summaries),
+        "ttft_ms_p95": max(s["ttft_ms"]["p95"] for s in summaries),
+        "latency_ms_p95": max(s["latency_ms"]["p95"] for s in summaries),
+        "slot_occupancy": (sum(s["slot_occupancy"] for s in summaries)
+                           / len(summaries)),
+    }

@@ -1,0 +1,174 @@
+"""Continuous-batching scheduler: admission queue + slot manager.
+
+One scheduler drives one :class:`~repro.serving.engine.ServingEngine`
+(conceptually: the serving process inside one ``ch-run`` capsule).  The
+loop is the standard continuous-batching shape:
+
+    admit:  while a slot is free and the queue is non-empty, prefill the
+            next request into the freed slot and sample its first token
+            from the prefill logits (TTFT = one prefill);
+    decode: one ``decode_once`` over the pooled cache advances *every*
+            live sequence by one token, each sampled with its own
+            ``SamplingParams``;
+    retire: a sequence that hits its own ``max_new_tokens`` or emits its
+            ``eos_token`` leaves immediately — its KV blocks return to
+            the ring and the slot is refilled on the next admit, mid-
+            decode of the others.
+
+This replaces the seed engine's run-everything-to-the-global-max loop:
+short requests stop costing decode work the step they finish, and
+``decode_steps`` accounting makes the saving testable.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.metrics import ServingMetrics
+
+
+@dataclass
+class _ReqState:
+    rid: int
+    request: Request
+    slot: int = -1
+    pos: int = 0                       # next cache write position
+    emitted: List[int] = field(default_factory=list)
+    finish_reason: str = ""
+
+
+class Scheduler:
+    """Admission queue + continuous-batching slot manager for one engine."""
+
+    def __init__(self, engine: ServingEngine,
+                 metrics: Optional[ServingMetrics] = None,
+                 clock=time.perf_counter):
+        self.engine = engine
+        self.max_slots = engine.max_slots
+        self.metrics = metrics or ServingMetrics(clock=clock)
+        self.queue: deque = deque()
+        self.active: Dict[int, _ReqState] = {}          # slot -> state
+        self.done: Dict[int, _ReqState] = {}            # rid  -> state
+        self.draining = False
+        self._next_rid = 0
+
+    @property
+    def decode_steps(self) -> int:
+        return self.metrics.decode_steps
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        if self.draining:
+            raise RuntimeError("scheduler is draining; admission closed")
+        sp = request.params
+        need = len(request.prompt) + sp.max_new_tokens
+        if need > self.engine.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(request.prompt)}) + max_new_tokens "
+                f"({sp.max_new_tokens}) exceeds max_seq_len "
+                f"({self.engine.max_seq_len})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(_ReqState(rid, request))
+        self.metrics.record_submit(rid)
+        return rid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    @property
+    def load(self) -> int:
+        return len(self.queue) + len(self.active)
+
+    # -- the loop ------------------------------------------------------------
+
+    def _admit(self) -> None:
+        while self.queue and self.engine.kv.free_slot_count > 0:
+            st = self.queue.popleft()
+            req = st.request
+            if req.params.max_new_tokens <= 0:      # nothing to generate
+                st.finish_reason = "length"
+                self.done[st.rid] = st
+                self.metrics.record_finish(st.rid, 0, "length")
+                continue
+            st.slot, last_logits = self.engine.prefill_into_slot(
+                req.prompt, req.encoder_input)
+            st.pos = len(req.prompt)
+            tok = int(self.engine.sample_tokens(
+                last_logits[None],
+                np.asarray([req.params.temperature], np.float32),
+                np.asarray([req.params.greedy]))[0])
+            st.emitted.append(tok)
+            self.metrics.record_first_token(st.rid)
+            if not self._maybe_retire(st, tok):
+                self.active[st.slot] = st
+
+    def _maybe_retire(self, st: _ReqState, tok: int) -> bool:
+        sp = st.request.params
+        reason = ""
+        if len(st.emitted) >= sp.max_new_tokens:
+            reason = "length"
+        elif sp.eos_token is not None and tok == sp.eos_token:
+            reason = "eos"
+        if not reason:
+            return False
+        st.finish_reason = reason
+        self.active.pop(st.slot, None)
+        self.engine.free_slot(st.slot)
+        self.done[st.rid] = st
+        self.metrics.record_finish(st.rid, len(st.emitted), reason)
+        return True
+
+    def step(self) -> bool:
+        """Admit into free slots, then decode one token for every live
+        sequence.  Returns False when there was nothing to do."""
+        self._admit()
+        if not self.active:
+            return False
+        S = self.max_slots
+        tokens = np.zeros(S, np.int32)
+        positions = np.zeros(S, np.int32)
+        temps = np.ones(S, np.float32)
+        greedy = np.zeros(S, bool)
+        for slot, st in self.active.items():
+            self.engine.kv.ensure_capacity(slot, st.pos + 1)
+            tokens[slot] = st.emitted[-1]
+            positions[slot] = st.pos
+            temps[slot] = st.request.params.temperature
+            greedy[slot] = st.request.params.greedy
+        logits = self.engine.decode_once(tokens, positions)
+        toks = self.engine.sample_tokens(logits, temps, greedy)
+        for slot in list(self.active):
+            st = self.active[slot]
+            st.pos += 1
+            tok = int(toks[slot])
+            st.emitted.append(tok)
+            self._maybe_retire(st, tok)
+        self.metrics.sample_gauges(len(self.queue), len(self.active),
+                                   self.max_slots)
+        return True
+
+    def run(self) -> None:
+        """Run until the queue and all slots are empty."""
+        while self.has_work:
+            self.step()
+
+    def drain(self) -> None:
+        """Graceful drain: close admission, finish all in-flight work."""
+        self.draining = True
+        self.run()
+
+    # -- results -------------------------------------------------------------
+
+    def output(self, rid: int) -> np.ndarray:
+        return np.asarray(self.done[rid].emitted, np.int32)
+
+    def finish_reason(self, rid: int) -> str:
+        return self.done[rid].finish_reason

@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim.
+
+The secure-cluster image cannot ``pip install`` extras (the whole point of
+the paper), so ``hypothesis`` may be absent.  Test modules import ``given``,
+``settings`` and ``st`` from here: with hypothesis installed they get the
+real thing; without it the property tests are marked skipped at decoration
+time and every other test in the module still collects and runs.
+"""
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:                                   # pragma: no cover
+    import pytest
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(*_a, **_kw):
+        def deco(fn):
+            @pytest.mark.skip(
+                reason="hypothesis not installed (property test)")
+            def shim():
+                pass
+            shim.__name__ = fn.__name__
+            shim.__doc__ = fn.__doc__
+            return shim
+        return deco
+
+    class _Strategy:
+        """Inert placeholder so strategy expressions at decoration time
+        (st.integers(...), st.one_of(...)) evaluate without hypothesis."""
+
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _Strategy()
+
+__all__ = ["given", "settings", "st"]

@@ -1,10 +1,9 @@
 """MoE dispatch tests: capacity bounds, combine correctness, aux loss."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.models import moe as M

@@ -1,0 +1,273 @@
+"""Continuous-batching serving subsystem: scheduler, paged KV cache,
+replica gateway, telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (KVBlockPool, OutOfBlocks, PagedKVCache,
+                           ReplicaGateway, Request, SamplingParams, Scheduler,
+                           ServingEngine, launch_capsule_replicas)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(qwen, slots=2, seq=48, seed=0):
+    cfg, params = qwen
+    return ServingEngine(cfg, params, max_seq_len=seq, max_slots=slots,
+                         rng_seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# KV block pool / paged cache
+# ---------------------------------------------------------------------------
+
+def test_block_pool_never_double_allocates():
+    pool = KVBlockPool(num_blocks=4, block_size=8)
+    a, b = pool.alloc(), pool.alloc()
+    assert a != b and pool.in_use == 2
+    pool.free([a])
+    seen = {b}
+    for _ in range(3):                      # drain the pool completely
+        blk = pool.alloc()
+        assert blk not in seen, "block handed out while still in use"
+        seen.add(blk)
+    with pytest.raises(OutOfBlocks):
+        pool.alloc()
+    pool.free([b])
+    with pytest.raises(AssertionError):     # double free is a hard error
+        pool.free([b])
+
+
+def test_block_pool_ring_recycling():
+    pool = KVBlockPool(num_blocks=3, block_size=8)
+    blocks = [pool.alloc() for _ in range(3)]
+    pool.free(blocks)                       # freed in order -> ring tail
+    assert [pool.alloc() for _ in range(3)] == blocks
+    assert pool.high_water == 3
+
+
+def test_paged_cache_slot_lifecycle(qwen):
+    cfg, _ = qwen
+    kv = PagedKVCache(cfg, max_slots=2, max_seq_len=32, block_size=8)
+    s0 = kv.alloc_slot(prompt_len=10)       # 2 blocks
+    s1 = kv.alloc_slot(prompt_len=3)        # 1 block
+    assert s0 != s1 and kv.pool.in_use == 3
+    kv.ensure_capacity(s1, 9)               # crosses into a second block
+    assert len(kv.block_table[s1]) == 2
+    with pytest.raises(OutOfBlocks):
+        kv.alloc_slot(5)                    # no slot free
+    kv.free_slot(s0)
+    assert kv.pool.in_use == 2 and kv.free_slot_count == 1
+    s2 = kv.alloc_slot(1)
+    assert s2 == s0                         # slot recycled
+    with pytest.raises(OutOfBlocks):
+        kv.ensure_capacity(s2, 33)          # beyond max_seq_len
+    occ = kv.occupancy()
+    assert occ["slots_in_use"] == 2 and occ["block_high_water"] >= 3
+
+
+# ---------------------------------------------------------------------------
+# engine primitives / compatibility wrapper
+# ---------------------------------------------------------------------------
+
+def test_scheduler_matches_prerefactor_greedy_algorithm(qwen):
+    """The scheduler path reproduces the seed engine's exact greedy loop
+    (prefill last-logit sample, then one step per token) bit-for-bit."""
+    from repro.models import transformer as T
+    cfg, params = qwen
+    eng = _engine(qwen)
+    prompt = np.array([5, 9, 2, 7], np.int32)
+    out = eng.generate([Request(prompt, SamplingParams(max_new_tokens=6,
+                                                       greedy=True))])[0]
+
+    cache = T.init_cache(cfg, 1, 48)
+    cache, pos, last = eng._prefill(params, jnp.asarray(prompt)[None],
+                                    cache, None)
+    tok = jnp.argmax(last, -1)
+    ref = [int(tok[0])]
+    for _ in range(5):
+        logits, cache = eng._step(params, {"tokens": tok[:, None],
+                                           "positions": pos, "cache": cache})
+        pos = pos + 1
+        tok = jnp.argmax(logits[:, 0], -1)
+        ref.append(int(tok[0]))
+    np.testing.assert_array_equal(out, np.asarray(ref, np.int32))
+
+
+def test_continuous_batching_bit_identical_to_solo(qwen):
+    """Greedy outputs of co-scheduled requests match serving each alone."""
+    prompts = [np.array([1, 2, 3, 4], np.int32),
+               np.array([9, 8, 7], np.int32),
+               np.array([4, 4, 4, 4, 4, 4], np.int32)]
+    sps = [SamplingParams(max_new_tokens=n, greedy=True) for n in (5, 8, 3)]
+    solo = [_engine(qwen).generate([Request(p, sp)])[0]
+            for p, sp in zip(prompts, sps)]
+    batched = _engine(qwen).generate(
+        [Request(p, sp) for p, sp in zip(prompts, sps)])
+    for s, b in zip(solo, batched):
+        np.testing.assert_array_equal(s, b)
+
+
+def test_per_request_sampling_params(qwen):
+    """Regression: seed engine applied requests[0].params to every row.
+    A greedy request must stay greedy when batched after a stochastic one."""
+    g_prompt = np.array([3, 1, 4, 1], np.int32)
+    g_sp = SamplingParams(max_new_tokens=6, greedy=True)
+    reference = _engine(qwen).generate([Request(g_prompt, g_sp)])[0]
+    # stochastic request submitted FIRST: its params must not leak to row 1
+    outs = _engine(qwen).generate([
+        Request(np.array([7, 7, 7], np.int32),
+                SamplingParams(max_new_tokens=6, temperature=5.0)),
+        Request(g_prompt, g_sp)])
+    np.testing.assert_array_equal(outs[1], reference)
+
+
+def test_generate_accepts_more_requests_than_slots(qwen):
+    eng = _engine(qwen, slots=2)
+    reqs = [Request(np.array([i + 1, i + 2], np.int32),
+                    SamplingParams(max_new_tokens=3, greedy=True))
+            for i in range(5)]
+    outs = eng.generate(reqs)
+    assert len(outs) == 5 and all(len(o) == 3 for o in outs)
+    assert eng.kv.occupancy()["slots_in_use"] == 0      # all retired
+
+
+# ---------------------------------------------------------------------------
+# early exit / token accounting
+# ---------------------------------------------------------------------------
+
+def test_token_count_accounting_early_exit(qwen):
+    """A short request stops costing decode work when it finishes: total
+    decode steps equal the longest request's tail, not the sum."""
+    eng = _engine(qwen)
+    sched = Scheduler(eng)
+    r_short = sched.submit(Request(np.array([1, 2, 3], np.int32),
+                                   SamplingParams(max_new_tokens=3,
+                                                  greedy=True)))
+    r_long = sched.submit(Request(np.array([4, 5, 6, 7], np.int32),
+                                  SamplingParams(max_new_tokens=9,
+                                                 greedy=True)))
+    sched.run()
+    assert len(sched.output(r_short)) == 3
+    assert len(sched.output(r_long)) == 9
+    # first token of each comes from its prefill; the long request then
+    # needs 8 decode steps — the seed engine would have burned 9 for BOTH.
+    assert sched.decode_steps == 8
+    assert eng.decode_steps == 8
+    assert sched.finish_reason(r_short) == "length"
+
+
+def test_eos_early_exit(qwen):
+    """Declaring the greedy continuation's 3rd token as EOS cuts the same
+    request short with reason 'eos'."""
+    prompt = np.array([2, 7, 1], np.int32)
+    full = _engine(qwen).generate(
+        [Request(prompt, SamplingParams(max_new_tokens=8, greedy=True))])[0]
+    eos = int(full[2])
+    sched = Scheduler(_engine(qwen))
+    rid = sched.submit(Request(prompt, SamplingParams(
+        max_new_tokens=8, greedy=True, eos_token=eos)))
+    sched.run()
+    out = sched.output(rid)
+    assert len(out) == 3 and out[-1] == eos
+    assert sched.finish_reason(rid) == "eos"
+
+
+def test_zero_token_budget_emits_nothing(qwen):
+    """max_new_tokens=0 returns an empty array (old-generate semantics),
+    costs no slot, and doesn't stall the batch it rides in."""
+    eng = _engine(qwen)
+    outs = eng.generate([
+        Request(np.array([1, 2], np.int32),
+                SamplingParams(max_new_tokens=0, greedy=True)),
+        Request(np.array([3, 4], np.int32),
+                SamplingParams(max_new_tokens=3, greedy=True))])
+    assert len(outs[0]) == 0
+    assert len(outs[1]) == 3
+    assert eng.prefill_tokens == 2          # zero-budget request never ran
+
+
+def test_submit_rejects_overflow(qwen):
+    sched = Scheduler(_engine(qwen, seq=16))
+    with pytest.raises(ValueError):
+        sched.submit(Request(np.arange(10, dtype=np.int32),
+                             SamplingParams(max_new_tokens=10)))
+
+
+# ---------------------------------------------------------------------------
+# gateway
+# ---------------------------------------------------------------------------
+
+def test_gateway_least_loaded_and_drain(qwen):
+    gw = ReplicaGateway.from_engines([_engine(qwen, seed=0),
+                                      _engine(qwen, seed=1)])
+    handles = [gw.submit(Request(np.array([1 + i, 2, 3], np.int32),
+                                 SamplingParams(max_new_tokens=4,
+                                                greedy=True)))
+               for i in range(6)]
+    # least-loaded routing alternates while both replicas are idle
+    assert {h[0] for h in handles} == {0, 1}
+    assert [r.routed for r in gw.replicas] == [3, 3]
+    gw.drain()
+    # drain completed every in-flight request
+    for h in handles:
+        assert len(gw.result(h)) == 4
+    assert not gw.has_work
+    with pytest.raises(RuntimeError):
+        gw.submit(Request(np.array([1], np.int32)))
+    tot = gw.stats()["totals"]
+    assert tot["requests_completed"] == 6
+    assert tot["total_new_tokens"] == 24
+
+
+def test_gateway_capsule_replicas(qwen, tmp_path):
+    """Replicas launched through the ch-run analogue carry capsule
+    bookkeeping (image, uid map) from CapsuleRuntime."""
+    gw, dep = launch_capsule_replicas(
+        2, lambda: _engine(qwen), tmp_path)
+    assert all(r.capsule and r.capsule["image"] == "serving-replica"
+               and "user namespace" in r.capsule["uid_map"]
+               for r in gw.replicas)
+    h = gw.submit(Request(np.array([1, 2, 3], np.int32),
+                          SamplingParams(max_new_tokens=2, greedy=True)))
+    gw.drain()
+    assert len(gw.result(h)) == 2
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_metrics_summary_and_export(qwen, tmp_path):
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.5
+        return t[0]
+
+    sched = Scheduler(_engine(qwen), clock=clock)
+    rid = sched.submit(Request(np.array([1, 2], np.int32),
+                               SamplingParams(max_new_tokens=3,
+                                              greedy=True)))
+    sched.run()
+    s = sched.metrics.summary()
+    assert s["requests_completed"] == 1
+    assert s["total_new_tokens"] == 3
+    assert s["ttft_ms"]["p50"] > 0
+    assert s["latency_ms"]["p95"] >= s["ttft_ms"]["p50"]
+    assert s["finish_reasons"] == {"length": 1}
+    path = sched.metrics.export(tmp_path / "m.json", arch="qwen2-0.5b")
+    import json
+    back = json.loads(path.read_text())
+    assert back["arch"] == "qwen2-0.5b"
+    assert back["requests_completed"] == 1
+    assert 0 < back["slot_occupancy"] <= 1
+    _ = rid

@@ -1,11 +1,10 @@
 """Mamba2 / SSD tests: chunked scan vs naive recurrence, decode consistency,
 property-based invariants."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm as S

@@ -3,8 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import checkpoint as ck
 from repro import optim
