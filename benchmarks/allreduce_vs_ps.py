@@ -19,13 +19,13 @@ import jax, jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.core import hvd, paramserver
+from repro.launch.mesh import make_mesh
 from repro import optim
 from repro.launch.dryrun import collective_bytes
 cfg = ModelConfig(name="t", family="dense", num_layers=4, d_model=256,
                   num_heads=8, num_kv_heads=4, d_ff=1024, vocab_size=32000)
 key = jax.random.PRNGKey(0)
-mesh = jax.make_mesh(({ranks},), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh(({ranks},), ("data",))
 opt = optim.rmsprop(1e-3)
 loss_fn = lambda p, b: T.lm_loss(p, cfg, b)
 p_s = jax.eval_shape(lambda k: T.init_params(cfg, k), key)

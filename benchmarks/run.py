@@ -82,7 +82,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", help="comma list: scaling,overhead,ps,physics,"
-                                   "roofline,kernels,serving")
+                                   "roofline,kernels,serving,prefix_cache")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -125,6 +125,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append(("serving/FAILED", 0.0, "see stderr"))
+    if want("prefix_cache"):
+        from benchmarks import prefix_cache
+        try:
+            rows += prefix_cache.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("prefix_cache/FAILED", 0.0, "see stderr"))
     if want("physics"):
         from benchmarks import physics_validation
         try:

@@ -83,12 +83,12 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.models import gan3d as G
 from repro.core import hvd
+from repro.launch.mesh import make_mesh
 from repro import optim
 from repro.launch.dryrun import collective_bytes
 cfg = G.GAN3DConfig(g_fc_ch=6, g_base=16, d_base=8)
 key = jax.random.PRNGKey(0)
-mesh = jax.make_mesh(({ranks},), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh(({ranks},), ("data",))
 d_opt = optim.rmsprop(1e-3)
 def local(dp, ds, gp, batch, z):
     grads, m = jax.grad(G.d_loss, has_aux=True)(dp, gp, cfg, batch, z)
@@ -102,7 +102,7 @@ ds_s = jax.eval_shape(d_opt.init, dp_s)
 batch_s = {{"images": jax.ShapeDtypeStruct((B,25,25,25,1), jnp.float32),
            "energies": jax.ShapeDtypeStruct((B,), jnp.float32)}}
 z_s = jax.ShapeDtypeStruct((B, cfg.latent_dim), jnp.float32)
-f = jax.jit(jax.shard_map(local, mesh=mesh,
+f = jax.jit(hvd.shard_map(local, mesh=mesh,
     in_specs=(P(), P(), P(), {{"images": P("data"), "energies": P("data")}}, P("data")),
     out_specs=(P(), P()), check_vma=False))
 c = f.lower(dp_s, ds_s, gp_s, batch_s, z_s).compile()

@@ -3,7 +3,18 @@ executed for real through the continuous-batching scheduler
 (``engine.generate`` routes each request through per-slot prefill, the
 paged KV pool, and per-request sampling — see ``repro/serving/``).
 
+Two modes:
+
+* default — a burst of independent random-prompt requests (continuous
+  batching demo);
+* ``--chat`` — a multi-turn conversation replaying a shared system
+  prompt: every turn's prompt is system + history + new user tokens, so
+  the prefix-cache subsystem serves the conversation so far from its KV
+  store and only the new tail runs through prefill.  Prints per-turn
+  recompute counts and the final hit rate.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b
+      PYTHONPATH=src python examples/serve_lm.py --chat --turns 6
 """
 import argparse
 import time
@@ -13,30 +24,17 @@ import numpy as np
 
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import transformer as T
-from repro.serving import Request, SamplingParams, ServingEngine
+from repro.serving import Request, SamplingParams, Scheduler, ServingEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCHS)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--slots", type=int, default=4)
-    args = ap.parse_args()
-
-    cfg = get_smoke_config(args.arch)
-    if cfg.family == "encdec":
-        raise SystemExit("serving demo targets decoder LMs; pick another arch")
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, max_seq_len=128, max_slots=args.slots)
-
+def run_burst(engine, cfg, args):
     rng = np.random.default_rng(0)
     reqs = [Request(rng.integers(0, cfg.vocab_size, rng.integers(4, 12),
                                  dtype=np.int32).astype(np.int32),
                     SamplingParams(max_new_tokens=args.max_new,
                                    temperature=0.8))
             for _ in range(args.slots)]
-    print(f"arch={args.arch} (smoke variant, family={cfg.family})  "
-          f"batch={len(reqs)} requests")
+    print(f"batch={len(reqs)} requests")
     t0 = time.time()
     outs = engine.generate(reqs)
     dt = time.time() - t0
@@ -45,6 +43,71 @@ def main():
         print(f"  req {i}: prompt_len={len(reqs[i].prompt)} -> {o.tolist()}")
     print(f"{total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s batched decode)")
+
+
+def run_chat(engine, cfg, args):
+    """Multi-turn chat against one engine: shared system prompt + growing
+    history, each turn admitted as a full independent prompt — exactly the
+    traffic shape the prefix cache exists for."""
+    rng = np.random.default_rng(0)
+    sched = Scheduler(engine)
+    system = rng.integers(0, cfg.vocab_size, args.system_len,
+                          dtype=np.int32)
+    history = system
+    print(f"chat: {args.turns} turns over a shared {len(system)}-token "
+          f"system prompt (prefix cache "
+          f"{'on' if engine.prefix_cache else 'off'})")
+    for turn in range(args.turns):
+        user = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 9)),
+                            dtype=np.int32)
+        prompt = np.concatenate([history, user])
+        before = engine.prefill_tokens
+        t0 = time.time()
+        rid = sched.submit(Request(prompt, SamplingParams(
+            max_new_tokens=args.max_new, greedy=True)))
+        sched.run()
+        reply = sched.output(rid)
+        ttft_ms = (sched.metrics._first[rid]
+                   - sched.metrics._submit[rid]) * 1e3
+        print(f"  turn {turn}: prompt {len(prompt):4d} tok, "
+              f"recomputed {engine.prefill_tokens - before:3d}, "
+              f"ttft {ttft_ms:6.1f} ms -> {reply.tolist()}")
+        history = np.concatenate([prompt, reply])
+    pc = sched.metrics.summary()["prefix_cache"]
+    print(f"prefix cache: hit rate {pc['hit_rate']:.2f}, "
+          f"{pc['cached_tokens_served']}/{pc['prompt_tokens']} prompt "
+          f"tokens served from cache "
+          f"({pc['cached_token_fraction']:.0%}), "
+          f"{pc['evictions']} blocks evicted")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCHS)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chat", action="store_true",
+                    help="multi-turn shared-prefix chat demo")
+    ap.add_argument("--turns", type=int, default=5)
+    ap.add_argument("--system-len", type=int, default=96)
+    ap.add_argument("--prefix-blocks", type=int, default=128)
+    ap.add_argument("--no-prefix-cache", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.family == "encdec":
+        raise SystemExit("serving demo targets decoder LMs; pick another arch")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(
+        cfg, params, max_seq_len=1024 if args.chat else 128,
+        max_slots=args.slots,
+        prefix_cache_blocks=(0 if args.no_prefix_cache
+                             else args.prefix_blocks))
+    print(f"arch={args.arch} (smoke variant, family={cfg.family})")
+    if args.chat:
+        run_chat(engine, cfg, args)
+    else:
+        run_burst(engine, cfg, args)
 
 
 if __name__ == "__main__":

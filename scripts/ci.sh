@@ -1,6 +1,10 @@
 #!/usr/bin/env sh
-# One-invocation verify recipe: the repo's tier-1 test command (ROADMAP.md).
+# One-invocation verify recipe: the repo's tier-1 test command (ROADMAP.md),
+# then a fast smoke of the prefix-cache benchmark (cold/warm TTFT + the
+# bit-identity assertion inside it).
 # Usage: scripts/ci.sh [extra pytest args]
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# invoked directly (not via benchmarks.run) so a failure fails the build
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.prefix_cache

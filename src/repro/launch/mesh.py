@@ -14,20 +14,34 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:                                   # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:                    # older jax: meshes are implicitly Auto
+    AxisType = None
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+_mesh = make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(data: Optional[int] = None):
     """Mesh over whatever host devices exist (smoke tests / examples)."""
     n = data or len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    return _mesh((n,), ("data",))
 
 
 # TPU v5e hardware constants (per chip) used by the roofline analysis.

@@ -5,10 +5,13 @@ queue -> per-slot prefill -> batched decode with per-request sampling ->
 early exit on each request's own ``max_new_tokens`` / EOS.  Prints
 per-request outputs plus TTFT / throughput telemetry, and can fan out
 over multiple engine replicas (``--replicas``, each conceptually one
-``ch-run`` capsule) behind the least-loaded gateway.
+``ch-run`` capsule) behind the prefix-affine, load-balanced gateway.
+``--prefix-cache-blocks N`` (default on) gives each replica an N-block
+prefix store + radix index; ``--shared-prefix K`` makes every request
+open with the same K synthetic tokens to exercise it.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \\
-      --requests 8 --max-new 16
+      --requests 8 --max-new 16 --shared-prefix 64
 
 Add ``--metrics-json PATH`` to export the scheduler telemetry for the
 benchmark harness.
@@ -32,6 +35,10 @@ def main(argv=None):
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--metrics-json", default=None)
+    ap.add_argument("--prefix-cache-blocks", type=int, default=64,
+                    help="per-replica prefix-store KV blocks (0 disables)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="open every prompt with this many shared tokens")
     args = ap.parse_args(argv)
 
     import jax
@@ -47,14 +54,19 @@ def main(argv=None):
         raise SystemExit("serve launcher targets decoder LMs")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     engines = [ServingEngine(cfg, params, max_seq_len=args.max_seq_len,
-                             max_slots=args.max_slots, rng_seed=r)
+                             max_slots=args.max_slots, rng_seed=r,
+                             prefix_cache_blocks=args.prefix_cache_blocks)
                for r in range(args.replicas)]
     gateway = ReplicaGateway.from_engines(engines)
 
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix,
+                          dtype=np.int32)
     handles = [gateway.submit(Request(
-        rng.integers(0, cfg.vocab_size, int(rng.integers(4, 12)),
-                     dtype=np.int32),
+        np.concatenate([shared,
+                        rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(4, 12)),
+                                     dtype=np.int32)]),
         SamplingParams(max_new_tokens=args.max_new, greedy=args.greedy,
                        temperature=args.temperature)))
         for _ in range(args.requests)]
@@ -72,6 +84,11 @@ def main(argv=None):
           f"ttft p95 {tot['ttft_ms_p95']:.1f} ms, "
           f"latency p95 {tot['latency_ms_p95']:.1f} ms, "
           f"slot occupancy {tot['slot_occupancy']:.2f}")
+    pc = tot.get("prefix_cache", {})
+    if pc.get("hits", 0) or pc.get("misses", 0):
+        print(f"prefix cache: hit rate {pc['hit_rate']:.2f}, "
+              f"{pc['cached_tokens_served']}/{pc['prompt_tokens']} prompt "
+              f"tokens served from cache, {pc['evictions']} evictions")
     if args.metrics_json:
         with open(args.metrics_json, "w") as f:
             json.dump(stats, f, indent=2, sort_keys=True, default=str)

@@ -4,4 +4,5 @@ from repro.serving.gateway import (CapsuleReplica, ReplicaGateway,
                                    launch_capsule_replicas)
 from repro.serving.kvcache import KVBlockPool, OutOfBlocks, PagedKVCache
 from repro.serving.metrics import ServingMetrics, merge_summaries
+from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.serving.scheduler import Scheduler

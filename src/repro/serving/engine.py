@@ -3,13 +3,17 @@
 The serving counterpart of the deployment story: the same capsule image
 serves a model with continuously batched requests.  The engine owns the
 pooled decode cache (a :class:`~repro.serving.kvcache.PagedKVCache` over
-``max_slots`` sequences) and exposes the two primitives the scheduler
-drives:
+``max_slots`` sequences) and exposes the primitives the scheduler drives:
 
-* ``prefill_into_slot`` — replay one prompt through ``decode_step`` under
-  a ``lax.scan`` at batch 1, scatter the resulting cache into a freed
-  slot, and return the last-token logits (the first sample comes from
-  these, so TTFT is one prefill, not one full decode round).
+* ``prefill_into_slot`` — replay one prompt through ``decode_step`` in
+  fixed-size *chunks* under a ``lax.scan`` at batch 1, scatter the
+  resulting cache into a freed slot, and return the last-token logits
+  (the first sample comes from these, so TTFT is one prefill, not one
+  full decode round).  Chunking bounds recompiles to ONE prefill program
+  regardless of prompt length, and the ``start_pos`` resume path lets a
+  prompt whose prefix is already resident in the prefix store skip
+  straight to its first uncached token: the cached KV blocks are loaded
+  into the batch-1 cache and only the suffix chunks execute.
 * ``decode_once`` — one token for every slot against the pooled cache;
   ``serve_step`` here is the exact program the decode dry-run shapes
   lower.
@@ -23,7 +27,7 @@ scheduler.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,19 +63,38 @@ def make_serve_step(cfg, *, long_context: bool = False):
 
 
 class ServingEngine:
-    """Fixed-slot batched engine (continuous batching over ``max_slots``)."""
+    """Fixed-slot batched engine (continuous batching over ``max_slots``).
+
+    ``prefix_cache_blocks > 0`` turns on the prefix-cache subsystem (see
+    :mod:`repro.serving.prefix_cache`): the paged cache grows a prefix
+    store of that many KV blocks and ``self.prefix_cache`` holds the
+    radix index the scheduler probes at admission.  Families whose decode
+    cache is not positional (SSM/hybrid state) or whose KV depends on
+    more than the token ids (enc-dec) silently leave it disabled.
+    """
 
     def __init__(self, cfg, params, max_seq_len: int, max_slots: int = 8,
-                 rng_seed: int = 0, kv_block_size: int = 16):
+                 rng_seed: int = 0, kv_block_size: int = 16,
+                 prefix_cache_blocks: int = 0, prefill_chunk: int = 16):
         self.cfg = cfg
         self.params = params
         self.max_seq_len = max_seq_len
         self.max_slots = max_slots
         self.key = jax.random.PRNGKey(rng_seed)
-        self.kv = PagedKVCache(cfg, max_slots, max_seq_len,
-                               block_size=kv_block_size)
+        self.prefill_chunk = prefill_chunk
+        want_prefix = prefix_cache_blocks > 0
+        self.kv = PagedKVCache(
+            cfg, max_slots, max_seq_len, block_size=kv_block_size,
+            prefix_blocks=(prefix_cache_blocks if want_prefix and
+                           self._family_supports_prefix(cfg) else 0))
+        self.prefix_cache = None
+        if self.kv.prefix_pool is not None:
+            from repro.serving.prefix_cache import PrefixCache
+            self.prefix_cache = PrefixCache(self.kv)
         self.decode_steps = 0                # accounting (tested)
-        self.prefill_tokens = 0
+        self.prefill_tokens = 0              # real tokens run through prefill
+        self.prefill_tokens_executed = 0     # incl. chunk padding (FLOPs proxy)
+        self.cached_prefix_tokens = 0        # tokens served from the store
         self._step = jax.jit(make_serve_step(cfg))
 
         def prefill(params, tokens, cache, encoder_output):
@@ -91,7 +114,28 @@ class ServingEngine:
                 body, (cache, jnp.zeros((B,), jnp.int32)), jnp.arange(P))
             return cache, pos, logits[-1]
 
-        self._prefill = jax.jit(prefill)
+        self._prefill = jax.jit(prefill)     # whole-prompt reference path
+
+        def prefill_chunk_fn(params, tokens, cache, pos0, encoder_output):
+            """One fixed-width chunk from dynamic start position ``pos0``:
+            tokens (1, C) -> (cache, per-step logits (C, V)).  Compiled
+            once; every prompt length reuses the same program."""
+            C = tokens.shape[1]
+
+            def body(carry, t):
+                cache, pos = carry
+                batch = {"tokens": tokens[:, t][:, None], "positions": pos,
+                         "cache": cache}
+                if encoder_output is not None:
+                    batch["encoder_output"] = encoder_output
+                logits, cache = T.decode_step(params, cfg, batch)
+                return (cache, pos + 1), logits[:, 0]
+
+            (cache, _), logits = jax.lax.scan(
+                body, (cache, pos0), jnp.arange(C))
+            return cache, logits[:, 0]       # (C, V): batch row 0
+
+        self._prefill_chunk = jax.jit(prefill_chunk_fn, donate_argnums=2)
 
         def sample(key, logits, temps, greedy):
             cat = jax.random.categorical(key, logits / temps[:, None])
@@ -108,30 +152,64 @@ class ServingEngine:
                 (max_slots, cfg.encoder_seq, cfg.d_model),
                 jnp.dtype(cfg.dtype))
 
+    @staticmethod
+    def _family_supports_prefix(cfg) -> bool:
+        if cfg.family == "encdec":       # KV depends on the audio frames too
+            return False
+        return all(ax is not None
+                   for ax in PagedKVCache._seq_axis_per_leaf(cfg, 1))
+
     # -- scheduler-facing primitives ----------------------------------------
 
     def prefill_into_slot(self, prompt: np.ndarray,
                           encoder_input: Optional[np.ndarray] = None,
+                          *, start_pos: int = 0,
+                          prefix_blocks: Sequence[int] = (),
                           ) -> Tuple[int, np.ndarray]:
         """Prefill one prompt into a free slot of the pooled cache.
 
+        ``start_pos > 0`` resumes from a cached prefix: ``prefix_blocks``
+        (from :meth:`PrefixCache.lookup`) are loaded into positions
+        ``[0, start_pos)`` and only ``prompt[start_pos:]`` runs through
+        the model, in ``prefill_chunk``-sized pieces.
+
         Returns ``(slot, last_logits (V,))`` — the scheduler samples the
-        first new token from these logits, so admission costs one prefill
-        and the request joins the very next decode round.
+        first new token from these logits, so admission costs one
+        (suffix) prefill and the request joins the very next decode round.
         """
         prompt = np.asarray(prompt, np.int32)
-        slot = self.kv.alloc_slot(len(prompt))
+        P = len(prompt)
+        assert 0 <= start_pos < P, (start_pos, P)
+        slot = self.kv.alloc_slot(P)
         enc1 = None
         if self.cfg.family == "encdec":
             enc1 = self._encode(self.params,
                                 jnp.asarray(encoder_input)[None])
             self._enc_pool = self._enc_pool.at[slot].set(enc1[0])
         cache1 = T.init_cache(self.cfg, 1, self.max_seq_len)
-        cache1, _, last_logits = self._prefill(
-            self.params, jnp.asarray(prompt)[None], cache1, enc1)
+        if start_pos:
+            cache1 = self.kv.load_prefix_blocks(cache1, prefix_blocks)
+        C = self.prefill_chunk
+        n = P - start_pos
+        n_chunks = -(-n // C)
+        padded = np.zeros(n_chunks * C, np.int32)
+        padded[:n] = prompt[start_pos:]
+        last_logits = None
+        pos = start_pos
+        for c in range(n_chunks):
+            chunk = jnp.asarray(padded[c * C:(c + 1) * C])[None]
+            cache1, logits = self._prefill_chunk(
+                self.params, chunk, cache1,
+                jnp.full((1,), pos, jnp.int32), enc1)
+            li = (P - 1) - pos               # last real token in this chunk?
+            if 0 <= li < C:
+                last_logits = logits[li]
+            pos += C
         self.kv.write_prefill(slot, cache1)
-        self.prefill_tokens += len(prompt)
-        return slot, np.asarray(last_logits[0])
+        self.prefill_tokens += n
+        self.prefill_tokens_executed += n_chunks * C
+        self.cached_prefix_tokens += start_pos
+        return slot, np.asarray(last_logits)
 
     def decode_once(self, tokens: np.ndarray,
                     positions: np.ndarray) -> np.ndarray:

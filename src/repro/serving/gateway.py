@@ -6,8 +6,14 @@ one ``ch-run`` capsule instance of the same immutable image, the way the
 paper's deployment runs one containerized process per allocation.  The
 gateway front-ends N replicas:
 
-* ``submit`` routes each request to the replica with the smallest load
-  (queue depth + live slots);
+* ``submit`` routes with *prefix affinity*: the request goes to the
+  replica whose prefix cache holds the longest prefix of its prompt
+  (ties and misses broken by least load).  When no replica has the
+  prefix yet, the first block of token ids is hashed to pick a stable
+  owner — so every request opening with the same system prompt lands on
+  the same capsule and warms a single cache instead of N — unless that
+  owner is overloaded by more than ``affinity_slack`` requests relative
+  to the least-loaded replica, in which case load wins;
 * ``step`` advances every replica one decode round (single-host stand-in
   for replicas running concurrently on their own nodes);
 * ``drain`` closes admission and runs every replica until all in-flight
@@ -21,6 +27,7 @@ handle; unit tests may also construct replicas from bare engines.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -46,28 +53,60 @@ class CapsuleReplica:
 
 
 class ReplicaGateway:
-    """Least-loaded request router over N scheduler replicas."""
+    """Prefix-affine, load-balanced request router over N replicas."""
 
-    def __init__(self, replicas: List[CapsuleReplica]):
+    def __init__(self, replicas: List[CapsuleReplica],
+                 affinity_slack: int = 2):
         assert replicas, "gateway needs at least one replica"
         self.replicas = replicas
+        self.affinity_slack = affinity_slack
         self.draining = False
 
     @classmethod
-    def from_engines(cls, engines: List[ServingEngine],
+    def from_engines(cls, engines: List[ServingEngine], *,
+                     affinity_slack: int = 2,
                      **sched_kw) -> "ReplicaGateway":
         return cls([CapsuleReplica(f"replica{i}", Scheduler(e, **sched_kw))
-                    for i, e in enumerate(engines)])
+                    for i, e in enumerate(engines)],
+                   affinity_slack=affinity_slack)
 
     # -- routing -------------------------------------------------------------
 
+    def _least_loaded(self) -> int:
+        return min(range(len(self.replicas)),
+                   key=lambda i: (self.replicas[i].load, i))
+
+    def _route(self, request: Request) -> int:
+        """Prefix affinity first, hash ownership second, load third."""
+        floor = min(rep.load for rep in self.replicas)
+        matches = [rep.scheduler.prefix_match_len(request.prompt)
+                   for rep in self.replicas]
+        best = max(matches)
+        if best > 0:
+            idx = min((i for i, m in enumerate(matches) if m == best),
+                      key=lambda i: (self.replicas[i].load, i))
+            # a warm cache is not worth unbounded queueing: same slack
+            # rule as hash ownership
+            if self.replicas[idx].load <= floor + self.affinity_slack:
+                return idx
+        caching = [i for i, rep in enumerate(self.replicas)
+                   if rep.scheduler.prefix_cache is not None]
+        if caching and len(request.prompt) > 0:
+            # stable owner for a not-yet-cached prefix: hash the first
+            # KV block's worth of token ids
+            kv = self.replicas[caching[0]].scheduler.engine.kv
+            head = np.asarray(request.prompt[:kv.block_size], np.int32)
+            owner = caching[zlib.crc32(head.tobytes()) % len(caching)]
+            if self.replicas[owner].load <= floor + self.affinity_slack:
+                return owner
+        return self._least_loaded()
+
     def submit(self, request: Request) -> Tuple[int, int]:
-        """Route to the least-loaded replica; returns a (replica, rid)
-        handle usable with :meth:`result`."""
+        """Route with prefix affinity / least load; returns a
+        (replica, rid) handle usable with :meth:`result`."""
         if self.draining:
             raise RuntimeError("gateway is draining; admission closed")
-        idx = min(range(len(self.replicas)),
-                  key=lambda i: (self.replicas[i].load, i))
+        idx = self._route(request)
         rep = self.replicas[idx]
         rep.routed += 1
         return idx, rep.scheduler.submit(request)

@@ -9,21 +9,37 @@ a production server needs on top of that storage:
   positions each) handed out from a free list with ring-buffer semantics:
   blocks freed by a finished sequence go to the tail and are recycled from
   the head, so a retired request's memory is immediately reusable by the
-  next admission.  Double-allocation and double-free are hard errors.
+  next admission.  Every block carries a *reference count* so the prefix
+  cache can share one block between the radix tree and any number of
+  in-flight requests: ``alloc`` hands out a block at refcount 1, ``ref`` /
+  ``unref`` move it up and down, and the block returns to the free ring
+  only when the count reaches zero.  ``fork`` is the copy-on-write ledger
+  op: a fresh block allocated against a live source.  Double-allocation,
+  double-free, unref of a dead block, and ``free`` of a shared block are
+  hard errors.
 * ``PagedKVCache`` — per-slot block tables mapping each live sequence to
   the blocks backing its token positions, grown one block at a time as the
   sequence decodes, plus the scatter that writes a freshly prefilled
-  single-sequence cache into its slot of the pooled tree.
+  single-sequence cache into its slot of the pooled tree.  When built with
+  ``prefix_blocks > 0`` it also owns the *prefix store*: a second
+  cache-shaped tree whose batch axis indexes prefix blocks and whose
+  sequence axis is one block wide, holding the KV values of cached
+  prompt prefixes so a later request can load them instead of recomputing
+  the prefill (``save_prefix_block`` / ``load_prefix_block`` /
+  ``fork_prefix_block``).
 
 Families without a growing attention cache (pure SSM) still run through
 the same ledger: their physical state is constant-size, but the block
 table models the logical KV footprint the scheduler admits against, so
-occupancy telemetry is comparable across model families.
+occupancy telemetry is comparable across model families.  Such families
+(and enc-dec models, whose decoder KV depends on the audio frames, not
+the token ids alone) report ``supports_prefix_cache = False`` and skip
+the prefix store entirely.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +52,7 @@ class OutOfBlocks(RuntimeError):
 
 
 class KVBlockPool:
-    """Fixed-size pool of KV blocks with free-list recycling."""
+    """Fixed-size pool of KV blocks with free-list recycling + refcounts."""
 
     def __init__(self, num_blocks: int, block_size: int):
         assert num_blocks > 0 and block_size > 0
@@ -44,6 +60,7 @@ class KVBlockPool:
         self.block_size = block_size
         self._free = deque(range(num_blocks))
         self._in_use: set = set()
+        self._refs: Dict[int, int] = {}
         self.high_water = 0
 
     @property
@@ -61,12 +78,48 @@ class KVBlockPool:
         b = self._free.popleft()
         assert b not in self._in_use, f"block {b} double-allocated"
         self._in_use.add(b)
+        self._refs[b] = 1
         self.high_water = max(self.high_water, len(self._in_use))
         return b
 
+    # -- reference counting (prefix sharing) ---------------------------------
+
+    def refcount(self, b: int) -> int:
+        return self._refs.get(b, 0)
+
+    def ref(self, b: int) -> int:
+        """Add a reference to a live block (radix node, running request)."""
+        assert b in self._in_use, f"block {b} ref'd but not allocated"
+        self._refs[b] += 1
+        return self._refs[b]
+
+    def unref(self, b: int) -> int:
+        """Drop one reference; at zero the block returns to the free ring."""
+        assert b in self._in_use, f"block {b} unref'd but not allocated"
+        assert self._refs[b] > 0, f"block {b} refcount underflow"
+        self._refs[b] -= 1
+        left = self._refs[b]
+        if left == 0:
+            del self._refs[b]
+            self._in_use.remove(b)
+            self._free.append(b)
+        return left
+
+    def fork(self, src: int) -> int:
+        """Copy-on-write ledger op: allocate a fresh block that will hold a
+        private copy of ``src`` (the caller copies the data).  ``src`` must
+        be live — forking a freed block is a hard error."""
+        assert src in self._in_use, f"fork of dead block {src}"
+        return self.alloc()
+
     def free(self, blocks: List[int]) -> None:
+        """Exclusive-owner release.  Freeing a block somebody else still
+        references is a hard error — shared blocks go through ``unref``."""
         for b in blocks:
             assert b in self._in_use, f"block {b} freed but not allocated"
+            assert self._refs[b] == 1, \
+                f"block {b} freed with refcount {self._refs[b]}"
+            del self._refs[b]
             self._in_use.remove(b)
             self._free.append(b)          # ring: recycled oldest-freed first
 
@@ -79,10 +132,15 @@ class PagedKVCache:
     (a fresh prefill) into one slot; the per-leaf batch-axis index is
     detected from the model's cache spec, so every family (dense, MoE,
     VLM, SSM, hybrid, enc-dec) works unmodified.
+
+    With ``prefix_blocks > 0`` (and a family whose cache is positional),
+    ``prefix_store`` holds block-granular KV snapshots of cached prompt
+    prefixes, allocated from ``prefix_pool`` — a second ``KVBlockPool``
+    whose refcounts let the radix tree and in-flight requests share them.
     """
 
     def __init__(self, cfg, max_slots: int, max_seq_len: int,
-                 block_size: int = 16):
+                 block_size: int = 16, prefix_blocks: int = 0):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
@@ -96,22 +154,68 @@ class PagedKVCache:
         self._axes = self._batch_axes(cfg, max_seq_len)
         self._write = jax.jit(self._make_write(), donate_argnums=0)
 
+        # -- prefix store (optional) ----------------------------------------
+        self._seq_axes = self._seq_axis_per_leaf(cfg, max_slots)
+        self.prefix_pool: Optional[KVBlockPool] = None
+        self.prefix_store = None
+        if prefix_blocks > 0:
+            if not self.supports_prefix_cache:
+                raise ValueError(
+                    f"family {cfg.family!r} has a non-positional decode "
+                    "cache; prefix caching unsupported")
+            self.prefix_pool = KVBlockPool(prefix_blocks, block_size)
+            self.prefix_store = self._init_store(prefix_blocks)
+            self._save = jax.jit(self._make_save(), donate_argnums=0)
+            self._load = jax.jit(self._make_load(), donate_argnums=0)
+            self._copy = jax.jit(self._make_copy(), donate_argnums=0)
+
     # -- batch-axis detection ------------------------------------------------
 
     @staticmethod
-    def _batch_axes(cfg, seq_len: int) -> List[int]:
-        """Per-leaf index of the batch axis, found by diffing the cache
-        spec at batch=1 vs batch=2 (leaf order matches the cache tree)."""
+    def _struct_leaves(cfg, batch, seq_len):
         is_leaf = (lambda x: isinstance(x, tuple) and len(x) == 2
                    and isinstance(x[0], tuple))
-        s1 = jax.tree.leaves(T._cache_struct(cfg, 1, seq_len), is_leaf=is_leaf)
-        s2 = jax.tree.leaves(T._cache_struct(cfg, 2, seq_len), is_leaf=is_leaf)
+        return jax.tree.leaves(T._cache_struct(cfg, batch, seq_len),
+                               is_leaf=is_leaf)
+
+    @classmethod
+    def _batch_axes(cls, cfg, seq_len: int) -> List[int]:
+        """Per-leaf index of the batch axis, found by diffing the cache
+        spec at batch=1 vs batch=2 (leaf order matches the cache tree)."""
+        s1 = cls._struct_leaves(cfg, 1, seq_len)
+        s2 = cls._struct_leaves(cfg, 2, seq_len)
         axes = []
         for (sh1, _), (sh2, _) in zip(s1, s2):
             diff = [i for i, (a, b) in enumerate(zip(sh1, sh2)) if a != b]
             assert len(diff) == 1, (sh1, sh2)
             axes.append(diff[0])
         return axes
+
+    @classmethod
+    def _seq_axis_per_leaf(cls, cfg, batch: int) -> List[Optional[int]]:
+        """Per-leaf index of the token-position axis, found by diffing the
+        cache spec at two sequence lengths.  ``None`` for leaves with no
+        positional extent (SSM state / conv tails) — those families cannot
+        be prefix-cached positionally."""
+        s1 = cls._struct_leaves(cfg, batch, 8)
+        s2 = cls._struct_leaves(cfg, batch, 16)
+        axes: List[Optional[int]] = []
+        for (sh1, _), (sh2, _) in zip(s1, s2):
+            diff = [i for i, (a, b) in enumerate(zip(sh1, sh2)) if a != b]
+            assert len(diff) <= 1, (sh1, sh2)
+            axes.append(diff[0] if diff else None)
+        return axes
+
+    @property
+    def supports_prefix_cache(self) -> bool:
+        """True when every cache leaf is positional (sliceable per token)
+        and the KV depends on the token ids alone — enc-dec decoder KV
+        also depends on the encoder frames, so token-keyed reuse is
+        unsound there."""
+        return (self.cfg.family != "encdec"
+                and all(ax is not None for ax in self._seq_axes))
+
+    # -- scatter / gather programs -------------------------------------------
 
     def _make_write(self):
         axes = self._axes
@@ -126,6 +230,112 @@ class PagedKVCache:
             return jax.tree.unflatten(treedef, out)
 
         return write
+
+    def _init_store(self, prefix_blocks: int):
+        """Cache-shaped tree: batch axis -> prefix blocks, seq axis -> one
+        block of token positions.  Dtypes match the live cache exactly, so
+        a save/load roundtrip is bit-identical (int8 KV included)."""
+        leaves = self._struct_leaves(self.cfg, 1, self.max_seq_len)
+        treedef = jax.tree.structure(
+            T.init_cache_specs(self.cfg, 1, self.max_seq_len))
+        out = []
+        for (shape, dtype), bax, sax in zip(leaves, self._axes,
+                                            self._seq_axes):
+            sh = list(shape)
+            sh[bax] = prefix_blocks
+            sh[sax] = self.block_size
+            out.append(jnp.zeros(tuple(sh), dtype))
+        return jax.tree.unflatten(treedef, out)
+
+    def _make_save(self):
+        """store <- pooled[slot, pos0:pos0+bs] at block ``bid``."""
+        baxes, saxes, bs = self._axes, self._seq_axes, self.block_size
+
+        def save(store, pooled, slot, bid, pos0):
+            leaves_st, treedef = jax.tree.flatten(store)
+            leaves_p = jax.tree.leaves(pooled)
+            out = []
+            for lst, lp, bax, sax in zip(leaves_st, leaves_p, baxes, saxes):
+                piece = jax.lax.dynamic_index_in_dim(lp, slot, axis=bax,
+                                                     keepdims=True)
+                piece = jax.lax.dynamic_slice_in_dim(piece, pos0, bs,
+                                                     axis=sax)
+                starts = [jnp.int32(0)] * lst.ndim
+                starts[bax] = bid
+                out.append(jax.lax.dynamic_update_slice(lst, piece, starts))
+            return jax.tree.unflatten(treedef, out)
+
+        return save
+
+    def _make_load(self):
+        """dest(batch-1 cache)[0, bidx*bs : +bs] <- store[bid]."""
+        baxes, saxes, bs = self._axes, self._seq_axes, self.block_size
+
+        def load(dest, store, bid, bidx):
+            leaves_d, treedef = jax.tree.flatten(dest)
+            leaves_st = jax.tree.leaves(store)
+            out = []
+            for ld, lst, bax, sax in zip(leaves_d, leaves_st, baxes, saxes):
+                piece = jax.lax.dynamic_index_in_dim(lst, bid, axis=bax,
+                                                     keepdims=True)
+                starts = [jnp.int32(0)] * ld.ndim
+                starts[sax] = bidx * bs
+                out.append(jax.lax.dynamic_update_slice(ld, piece, starts))
+            return jax.tree.unflatten(treedef, out)
+
+        return load
+
+    def _make_copy(self):
+        """store[dst] <- store[src] (the physical half of copy-on-write)."""
+        baxes = self._axes
+
+        def copy(store, src, dst):
+            leaves, treedef = jax.tree.flatten(store)
+            out = []
+            for lst, bax in zip(leaves, baxes):
+                piece = jax.lax.dynamic_index_in_dim(lst, src, axis=bax,
+                                                     keepdims=True)
+                starts = [jnp.int32(0)] * lst.ndim
+                starts[bax] = dst
+                out.append(jax.lax.dynamic_update_slice(lst, piece, starts))
+            return jax.tree.unflatten(treedef, out)
+
+        return copy
+
+    # -- prefix-store operations ---------------------------------------------
+
+    def save_prefix_block(self, slot: int, pos0: int,
+                          into: Optional[int] = None) -> int:
+        """Snapshot pooled-cache positions ``[pos0, pos0+block_size)`` of
+        ``slot`` into a prefix block (freshly allocated unless ``into`` is
+        given).  Returns the block id."""
+        assert self.prefix_pool is not None, "prefix store not enabled"
+        assert pos0 + self.block_size <= self.max_seq_len, \
+            f"prefix block [{pos0}, {pos0 + self.block_size}) overruns cache"
+        bid = self.prefix_pool.alloc() if into is None else into
+        self.prefix_store = self._save(
+            self.prefix_store, self.cache, jnp.int32(slot), jnp.int32(bid),
+            jnp.int32(pos0))
+        return bid
+
+    def load_prefix_blocks(self, cache1, blocks: Sequence[int]):
+        """Copy stored prefix blocks into a batch-1 cache at their aligned
+        positions (block k of the list covers ``[k*bs, (k+1)*bs)``).
+        Returns the updated cache tree."""
+        assert self.prefix_pool is not None, "prefix store not enabled"
+        for k, bid in enumerate(blocks):
+            cache1 = self._load(cache1, self.prefix_store, jnp.int32(bid),
+                                jnp.int32(k))
+        return cache1
+
+    def fork_prefix_block(self, src: int) -> int:
+        """Copy-on-write: a private copy of a shared prefix block, so a
+        diverging branch never mutates data another reader still maps."""
+        assert self.prefix_pool is not None, "prefix store not enabled"
+        dst = self.prefix_pool.fork(src)
+        self.prefix_store = self._copy(self.prefix_store, jnp.int32(src),
+                                       jnp.int32(dst))
+        return dst
 
     # -- slot lifecycle ------------------------------------------------------
 
@@ -181,7 +391,7 @@ class PagedKVCache:
     # -- telemetry -----------------------------------------------------------
 
     def occupancy(self) -> Dict[str, float]:
-        return {
+        occ = {
             "slots_in_use": self.max_slots - len(self._free_slots),
             "max_slots": self.max_slots,
             "blocks_in_use": self.pool.in_use,
@@ -189,3 +399,7 @@ class PagedKVCache:
             "block_high_water": self.pool.high_water,
             "block_utilization": self.pool.in_use / self.pool.num_blocks,
         }
+        if self.prefix_pool is not None:
+            occ["prefix_blocks_in_use"] = self.prefix_pool.in_use
+            occ["prefix_blocks_total"] = self.prefix_pool.num_blocks
+        return occ

@@ -41,6 +41,12 @@ class ServingMetrics:
         self.active_slots: List[int] = []
         self.max_slots: int = 0
         self.decode_steps: int = 0
+        # prefix cache (zero everywhere when the cache is disabled)
+        self.prefix_hits: int = 0
+        self.prefix_misses: int = 0
+        self.cached_tokens_served: int = 0
+        self.prompt_tokens: int = 0
+        self.prefix_evictions: int = 0
 
     # -- recording -----------------------------------------------------------
 
@@ -54,6 +60,16 @@ class ServingMetrics:
         self._finish[rid] = self.clock()
         self._tokens[rid] = n_tokens
         self._reasons[rid] = reason
+
+    def record_prefix(self, cached_tokens: int, prompt_tokens: int) -> None:
+        """One admission's prefix-cache outcome: how many of the prompt's
+        tokens were served from the store instead of recomputed."""
+        if cached_tokens > 0:
+            self.prefix_hits += 1
+        else:
+            self.prefix_misses += 1
+        self.cached_tokens_served += cached_tokens
+        self.prompt_tokens += prompt_tokens
 
     def sample_gauges(self, queue_depth: int, active: int,
                       max_slots: int) -> None:
@@ -100,6 +116,17 @@ class ServingMetrics:
                             "peak": max(self.queue_depth, default=0)},
             "slot_occupancy": occ,
             "finish_reasons": reasons,
+            "prefix_cache": {
+                "hits": self.prefix_hits,
+                "misses": self.prefix_misses,
+                "hit_rate": (self.prefix_hits
+                             / max(self.prefix_hits + self.prefix_misses, 1)),
+                "cached_tokens_served": self.cached_tokens_served,
+                "prompt_tokens": self.prompt_tokens,
+                "cached_token_fraction": (self.cached_tokens_served
+                                          / max(self.prompt_tokens, 1)),
+                "evictions": self.prefix_evictions,
+            },
         }
 
     def to_json(self, **extra) -> str:
@@ -117,7 +144,20 @@ def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
     if not summaries:
         return {}
     total_tokens = sum(s["total_new_tokens"] for s in summaries)
+    pc = [s["prefix_cache"] for s in summaries if "prefix_cache" in s]
+    hits = sum(p["hits"] for p in pc)
+    misses = sum(p["misses"] for p in pc)
+    cached = sum(p["cached_tokens_served"] for p in pc)
+    prompt = sum(p["prompt_tokens"] for p in pc)
     return {
+        "prefix_cache": {
+            "hits": hits, "misses": misses,
+            "hit_rate": hits / max(hits + misses, 1),
+            "cached_tokens_served": cached,
+            "prompt_tokens": prompt,
+            "cached_token_fraction": cached / max(prompt, 1),
+            "evictions": sum(p["evictions"] for p in pc),
+        },
         "replicas": len(summaries),
         "requests_completed": sum(s["requests_completed"] for s in summaries),
         "total_new_tokens": total_tokens,

@@ -4,16 +4,24 @@ One scheduler drives one :class:`~repro.serving.engine.ServingEngine`
 (conceptually: the serving process inside one ``ch-run`` capsule).  The
 loop is the standard continuous-batching shape:
 
-    admit:  while a slot is free and the queue is non-empty, prefill the
-            next request into the freed slot and sample its first token
-            from the prefill logits (TTFT = one prefill);
+    admit:  while a slot is free and the queue is non-empty, probe the
+            prefix cache for the longest cached prefix of the next
+            request, prefill only the uncached suffix into the freed
+            slot, and sample its first token from the prefill logits
+            (TTFT = one *suffix* prefill on a cache hit);
     decode: one ``decode_once`` over the pooled cache advances *every*
             live sequence by one token, each sampled with its own
             ``SamplingParams``;
     retire: a sequence that hits its own ``max_new_tokens`` or emits its
             ``eos_token`` leaves immediately — its KV blocks return to
-            the ring and the slot is refilled on the next admit, mid-
-            decode of the others.
+            the ring, its prefix-block pins are released, and the slot
+            is refilled on the next admit, mid-decode of the others.
+
+Prefix-cache interplay: the matched blocks are pinned (refcounted) for
+the request's lifetime so LRU eviction can never reclaim KV a live
+sequence was served from, and every admitted prompt is inserted back
+into the radix tree right after its prefill, making its KV available to
+the next request that shares it.
 
 This replaces the seed engine's run-everything-to-the-global-max loop:
 short requests stop costing decode work the step they finish, and
@@ -40,6 +48,8 @@ class _ReqState:
     pos: int = 0                       # next cache write position
     emitted: List[int] = field(default_factory=list)
     finish_reason: str = ""
+    cached_len: int = 0                # tokens served from the prefix cache
+    prefix_blocks: List[int] = field(default_factory=list)   # pinned blocks
 
 
 class Scheduler:
@@ -56,10 +66,17 @@ class Scheduler:
         self.done: Dict[int, _ReqState] = {}            # rid  -> state
         self.draining = False
         self._next_rid = 0
+        # eviction counting is per-scheduler; the cache outlives us
+        pc = engine.prefix_cache
+        self._evict_base = pc.stats.evicted_blocks if pc else 0
 
     @property
     def decode_steps(self) -> int:
         return self.metrics.decode_steps
+
+    @property
+    def prefix_cache(self):
+        return self.engine.prefix_cache
 
     # -- submission ----------------------------------------------------------
 
@@ -87,6 +104,11 @@ class Scheduler:
     def load(self) -> int:
         return len(self.queue) + len(self.active)
 
+    def prefix_match_len(self, prompt: np.ndarray) -> int:
+        """Longest cached prefix this replica holds (gateway affinity)."""
+        pc = self.prefix_cache
+        return pc.peek(prompt) if pc is not None else 0
+
     # -- the loop ------------------------------------------------------------
 
     def _admit(self) -> None:
@@ -98,8 +120,17 @@ class Scheduler:
                 self.done[st.rid] = st
                 self.metrics.record_finish(st.rid, 0, "length")
                 continue
+            pc = self.prefix_cache
+            if pc is not None:
+                st.cached_len, st.prefix_blocks = pc.lookup(req.prompt)
             st.slot, last_logits = self.engine.prefill_into_slot(
-                req.prompt, req.encoder_input)
+                req.prompt, req.encoder_input,
+                start_pos=st.cached_len, prefix_blocks=st.prefix_blocks)
+            if pc is not None:
+                pc.insert(req.prompt, st.slot)
+                self.metrics.record_prefix(st.cached_len, len(req.prompt))
+                self.metrics.prefix_evictions = (pc.stats.evicted_blocks
+                                                 - self._evict_base)
             st.pos = len(req.prompt)
             tok = int(self.engine.sample_tokens(
                 last_logits[None],
@@ -122,6 +153,9 @@ class Scheduler:
         st.finish_reason = reason
         self.active.pop(st.slot, None)
         self.engine.free_slot(st.slot)
+        if st.prefix_blocks:
+            self.prefix_cache.release(st.prefix_blocks)
+            st.prefix_blocks = []
         self.done[st.rid] = st
         self.metrics.record_finish(st.rid, len(st.emitted), reason)
         return True
