@@ -82,7 +82,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", help="comma list: scaling,overhead,ps,physics,"
-                                   "roofline,kernels,serving,prefix_cache")
+                                   "roofline,kernels,serving,prefix_cache,"
+                                   "paged_attention")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -132,6 +133,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append(("prefix_cache/FAILED", 0.0, "see stderr"))
+    if want("paged_attention"):
+        from benchmarks import paged_attention
+        try:
+            rows += paged_attention.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("paged_attention/FAILED", 0.0, "see stderr"))
     if want("physics"):
         from benchmarks import physics_validation
         try:

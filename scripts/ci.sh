@@ -1,10 +1,13 @@
 #!/usr/bin/env sh
 # One-invocation verify recipe: the repo's tier-1 test command (ROADMAP.md),
-# then a fast smoke of the prefix-cache benchmark (cold/warm TTFT + the
-# bit-identity assertion inside it).
+# then fast smokes of the prefix-cache benchmark (cold/warm TTFT + the
+# bit-identity assertion inside it) and the paged-attention benchmark
+# (paged > dense concurrency at equal KV bytes, undersized-pool run with
+# no drops / no leaked pins, greedy bit-identity — each is asserted).
 # Usage: scripts/ci.sh [extra pytest args]
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # invoked directly (not via benchmarks.run) so a failure fails the build
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.prefix_cache
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.paged_attention

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd_scan as _ssd
 
@@ -52,6 +53,33 @@ def mha_flash_attention(q, k, v, *, causal: bool = True,
                               interpret=interpret)
     return out.reshape(Bz, KV, G, Sq, D).transpose(0, 3, 1, 2, 4) \
         .reshape(Bz, Sq, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           interpret: Optional[bool] = None):
+    """Model-layout paged decode attention.
+
+    q: (B, 1, H, D) — one decoding token per sequence, H = G * KV (GQA);
+    k_pages, v_pages: (num_pages, page_size, KV, D) block storage;
+    block_tables: (B, pages_per_seq) int32; lengths: (B,) valid positions
+    per sequence including the current token.  Returns (B, 1, H, D).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, S, H, D = q.shape
+    assert S == 1, "paged attention is single-token decode"
+    KV = k_pages.shape[2]
+    G = H // KV
+    qf = q[:, 0].reshape(B, KV, G, D)
+    out = _pa.paged_attention(qf, k_pages, v_pages, block_tables, lengths,
+                              window=window, softcap=softcap, scale=scale,
+                              interpret=interpret)
+    return out.reshape(B, 1, H, D)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -35,6 +35,43 @@ def attention_ref(q, k, v, *, causal: bool = True,
     return jnp.where(any_valid, out, 0.0).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        scale: Optional[float] = None,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """Oracle for the paged decode kernel: gather every sequence's pages
+    back into a dense (B, T, KV, D) layout, then run naive masked softmax
+    attention for the single query token.
+
+    q: (B, KV, G, D); k_pages, v_pages: (num_pages, page_size, KV, D);
+    block_tables: (B, pages_per_seq) int32; lengths: (B,) int32 counting
+    valid positions including the current token.  Returns (B, KV, G, D).
+    """
+    B, KV, G, D = q.shape
+    NP, page_size = k_pages.shape[0], k_pages.shape[1]
+    pages_per_seq = block_tables.shape[1]
+    T = pages_per_seq * page_size
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    tables = jnp.clip(block_tables.astype(jnp.int32), 0, NP - 1)
+    k = k_pages[tables.reshape(-1)].reshape(B, T, KV, D)
+    v = v_pages[tables.reshape(-1)].reshape(B, T, KV, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(T)[None, :]                        # (1, T)
+    lengths = lengths.astype(jnp.int32)[:, None]
+    mask = kpos < lengths                                # causal: q is last
+    if window is not None:
+        mask &= (lengths - 1) - kpos < window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    any_valid = mask.any(axis=1)[:, None, None, None]
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)
+
+
 def ssd_scan_ref(x, dt, A, B, C, chunk: int, initial_state=None):
     """Chunked SSD oracle — delegates to the model-level reference, which is
     itself validated against the naive recurrence in tests/test_ssm.py."""

@@ -35,6 +35,12 @@ def main(argv=None):
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--metrics-json", default=None)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged attention: block-resident KV gathered "
+                         "through block tables (Pallas kernel)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (paged only; below "
+                         "worst case = memory oversubscription)")
     ap.add_argument("--prefix-cache-blocks", type=int, default=64,
                     help="per-replica prefix-store KV blocks (0 disables)")
     ap.add_argument("--shared-prefix", type=int, default=0,
@@ -55,7 +61,8 @@ def main(argv=None):
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     engines = [ServingEngine(cfg, params, max_seq_len=args.max_seq_len,
                              max_slots=args.max_slots, rng_seed=r,
-                             prefix_cache_blocks=args.prefix_cache_blocks)
+                             prefix_cache_blocks=args.prefix_cache_blocks,
+                             paged=args.paged, num_blocks=args.num_blocks)
                for r in range(args.replicas)]
     gateway = ReplicaGateway.from_engines(engines)
 

@@ -138,12 +138,17 @@ def attend(q, k, v, *, scale: float, causal: bool,
 
 def attention_block(params, cfg, x, *, positions=None, causal: bool = True,
                     window: Optional[int] = None, cache=None,
-                    cache_index=None, kv_override=None, use_rope: bool = True):
+                    cache_index=None, kv_override=None, use_rope: bool = True,
+                    block_tables=None):
     """x: (B, S, d_model).  Returns (out, new_cache).
 
     positions: (B, S) or (3, B, S) for M-RoPE (defaults to broadcast arange).
     cache: {"k": (B, Smax, KV, D), "v": ...} — decode mode, S must be 1 and
       cache_index (B,) gives each sequence's write position.
+    block_tables: (B, blocks_per_slot) int32 — paged decode: cache leaves
+      are block storage {"k": (num_blocks, block_size, KV, D), ...}; this
+      step's k/v are scattered to (table[b, pos//bs], pos%bs) and
+      attention gathers through the table with the Pallas paged kernel.
     kv_override: (B, Skv, d) encoder output => cross-attention (no rope,
       no cache, bidirectional over kv).
     """
@@ -169,7 +174,26 @@ def attention_block(params, cfg, x, *, positions=None, causal: bool = True,
     sc = cfg.attn_logit_softcap
 
     new_cache = cache
-    if cache is not None and kv_override is None:
+    if cache is not None and block_tables is not None and kv_override is None:
+        # paged decode: scatter this step's k/v into block storage through
+        # the table, then gather-attend with the Pallas paged kernel
+        assert S == 1, "cache mode is one-token decode"
+        assert "k_scale" not in cache, "paged int8 KV unsupported"
+        from repro.kernels import ops as kops
+        idx = cache_index                                        # (B,) int32
+        rows = jnp.arange(B)
+        bs = cache["k"].shape[1]                                 # block size
+        blk = block_tables[rows, idx // bs]
+        off = idx % bs
+        upd_k = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
+        upd_v = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": upd_k, "v": upd_v}
+        # kernel casts tiles to f32 in VMEM, so bf16 pages go in unconverted
+        out = kops.paged_decode_attention(
+            q.reshape(B, S, h, dh), upd_k, upd_v, block_tables, idx + 1,
+            window=window, softcap=sc, scale=scale)
+        out = out.reshape(B, S, kv, g, dh)
+    elif cache is not None and kv_override is None:
         # decode: write this step's k/v at cache_index, attend over the cache
         assert S == 1, "cache mode is one-token decode"
         idx = cache_index                                        # (B,) int32

@@ -81,13 +81,14 @@ def _stack_init(fn, keys):
 
 def _apply_attn_mlp_layer(p, cfg, x, *, window, positions=None, causal=True,
                           cache=None, cache_index=None, encoder_out=None,
-                          use_rope=True):
+                          use_rope=True, block_tables=None):
     """Pre-norm attention + (cross-attention) + MLP/MoE.  Returns
     (x, new_cache, aux)."""
     h = _norm(cfg, p["ln1"], x)
     a, new_cache = attn.attention_block(
         p["attn"], cfg, h, positions=positions, causal=causal, window=window,
-        cache=cache, cache_index=cache_index, use_rope=use_rope)
+        cache=cache, cache_index=cache_index, use_rope=use_rope,
+        block_tables=block_tables)
     if cfg.post_block_norm:
         a = _norm(cfg, p["post_ln1"], a)
     x = x + a
@@ -400,7 +401,10 @@ def _encode(enc_params, cfg, encoder_input):
 def decode_step(params, cfg, batch: Dict[str, Any], *,
                 long_context: bool = False) -> Tuple[jnp.ndarray, Any]:
     """One-token decode.  batch: tokens (B,1), positions (B,), cache, plus
-    encoder_output / mrope_positions when applicable.
+    encoder_output / mrope_positions when applicable.  With
+    ``block_tables`` (B, blocks_per_slot) in the batch, the attention
+    cache leaves are block storage and K/V are gathered through the
+    tables (paged attention) instead of the dense per-slot layout.
     Returns (logits (B, 1, V) f32, new_cache)."""
     dt = jnp.dtype(cfg.dtype)
     tokens, idx, cache = batch["tokens"], batch["positions"], batch["cache"]
@@ -416,6 +420,7 @@ def decode_step(params, cfg, batch: Dict[str, Any], *,
     if positions is None:
         positions = idx[:, None]                                   # (B,1)
     encoder_out = batch.get("encoder_output")
+    block_tables = batch.get("block_tables")
     windows = layer_pattern(cfg, long_context)
     use_rope = cfg.max_pos_embed == 0
     new_cache = dict(cache)
@@ -435,7 +440,8 @@ def decode_step(params, cfg, batch: Dict[str, Any], *,
                     lc = jax.tree.map(lambda a: a[i], gc)
                     x, nc_i, _ = _apply_attn_mlp_layer(
                         lp, cfg, x, window=win, positions=positions, cache=lc,
-                        cache_index=idx, use_rope=use_rope)
+                        cache_index=idx, use_rope=use_rope,
+                        block_tables=block_tables)
                     ncs.append(nc_i)
                 nc = jax.tree.map(lambda *a: jnp.stack(a), *ncs)
             return x, nc

@@ -71,22 +71,35 @@ class ServingEngine:
     radix index the scheduler probes at admission.  Families whose decode
     cache is not positional (SSM/hybrid state) or whose KV depends on
     more than the token ids (enc-dec) silently leave it disabled.
+
+    ``paged=True`` switches the decode cache to physical block storage
+    gathered through per-slot block tables by the Pallas paged-attention
+    kernel; ``num_blocks`` then sizes the KV pool (default: worst case),
+    and sizing it *below* ``max_slots * ceil(max_seq_len/block_size)``
+    makes ``OutOfBlocks`` a real event the scheduler handles by deferring
+    admissions and preempting decode — the memory-oversubscription mode
+    that lets one replica serve more concurrent sequences than the dense
+    layout at the same KV budget.  Requires a positional, non-int8
+    attention cache (dense / MoE / VLM families).
     """
 
     def __init__(self, cfg, params, max_seq_len: int, max_slots: int = 8,
                  rng_seed: int = 0, kv_block_size: int = 16,
-                 prefix_cache_blocks: int = 0, prefill_chunk: int = 16):
+                 prefix_cache_blocks: int = 0, prefill_chunk: int = 16,
+                 paged: bool = False, num_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_seq_len = max_seq_len
         self.max_slots = max_slots
         self.key = jax.random.PRNGKey(rng_seed)
         self.prefill_chunk = prefill_chunk
+        self.paged = paged
         want_prefix = prefix_cache_blocks > 0
         self.kv = PagedKVCache(
             cfg, max_slots, max_seq_len, block_size=kv_block_size,
             prefix_blocks=(prefix_cache_blocks if want_prefix and
-                           self._family_supports_prefix(cfg) else 0))
+                           self._family_supports_prefix(cfg) else 0),
+            num_blocks=num_blocks, paged=paged)
         self.prefix_cache = None
         if self.kv.prefix_pool is not None:
             from repro.serving.prefix_cache import PrefixCache
@@ -138,7 +151,12 @@ class ServingEngine:
         self._prefill_chunk = jax.jit(prefill_chunk_fn, donate_argnums=2)
 
         def sample(key, logits, temps, greedy):
-            cat = jax.random.categorical(key, logits / temps[:, None])
+            # temperatures below epsilon ARE greedy: dividing by a tiny
+            # clamp overflows f32 and feeds categorical NaN-producing
+            # logits, so route those rows through argmax instead
+            greedy = jnp.logical_or(greedy, temps < 1e-4)
+            safe_t = jnp.where(greedy, jnp.float32(1.0), temps)
+            cat = jax.random.categorical(key, logits / safe_t[:, None])
             return jnp.where(greedy, jnp.argmax(logits, axis=-1), cat)
 
         self._sample_vec = jax.jit(sample)
@@ -220,6 +238,10 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(tokens, jnp.int32)[:, None],
                  "positions": jnp.asarray(positions, jnp.int32),
                  "cache": self.kv.cache}
+        if self.paged:
+            # free slots' rows point at the trash block; their dummy
+            # writes and speculative gathers never touch live KV
+            batch["block_tables"] = self.kv.device_block_tables()
         if self._enc_pool is not None:
             batch["encoder_output"] = self._enc_pool
         logits, self.kv.cache = self._step(self.params, batch)
@@ -228,11 +250,11 @@ class ServingEngine:
 
     def sample_tokens(self, logits: np.ndarray, temps: np.ndarray,
                       greedy: np.ndarray) -> np.ndarray:
-        """Per-row sampling: row i uses temps[i] / greedy[i]."""
+        """Per-row sampling: row i uses temps[i] / greedy[i].  Rows whose
+        temperature is below 1e-4 (including exactly 0.0) sample greedily."""
         self.key, sub = jax.random.split(self.key)
         return np.asarray(self._sample_vec(
-            sub, jnp.asarray(logits),
-            jnp.maximum(jnp.asarray(temps, jnp.float32), 1e-4),
+            sub, jnp.asarray(logits), jnp.asarray(temps, jnp.float32),
             jnp.asarray(greedy)))
 
     def free_slot(self, slot: int) -> None:

@@ -1,9 +1,26 @@
-"""Paged KV-cache pool: block accounting + slot-resident cache storage.
+"""Paged KV-cache pool: block accounting + block- or slot-resident storage.
 
-The physical decode cache stays in the model's dense layout — one
-``init_cache`` tree with a ``max_slots`` batch axis, because ``decode_step``
-is jitted over fixed shapes.  What this module adds is the *paging layer*
-a production server needs on top of that storage:
+Two physical layouts share one ledger:
+
+* **dense** (default) — the model's ``init_cache`` tree with a
+  ``max_slots`` batch axis.  Every slot owns its worst-case
+  ``max_seq_len`` stripe, so the pool can never actually run dry; the
+  block tables are accounting only.
+* **paged** (``paged=True``) — attention KV lives in *block* storage:
+  every cache leaf's batch axis indexes ``num_blocks + 1`` physical KV
+  blocks and its sequence axis is one block (``block_size`` positions)
+  wide.  A device-resident ``(max_slots, blocks_per_slot)`` block-table
+  tensor maps each slot's token positions to blocks, the decode step
+  gathers K/V through it with the Pallas paged-attention kernel, and the
+  pool may be sized **smaller than worst case** via the ``num_blocks``
+  knob (the ``gpu_memory_utilization`` analogue) — ``OutOfBlocks``
+  becomes a real, schedulable event the admission path must survive.
+  The extra physical block is the *trash block*: free slots' dummy
+  decode rows and unbacked table entries point there, so stray writes
+  and speculative DMAs never touch a live sequence's KV.
+
+What this module adds on top of the raw storage is the *paging layer*
+a production server needs:
 
 * ``KVBlockPool`` — a fixed budget of KV blocks (``block_size`` token
   positions each) handed out from a free list with ring-buffer semantics:
@@ -43,6 +60,7 @@ from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as T
 
@@ -125,13 +143,19 @@ class KVBlockPool:
 
 
 class PagedKVCache:
-    """Slot-resident pooled cache + per-slot block tables.
+    """Pooled decode-cache storage + per-slot block tables.
 
-    ``cache`` is the jitted-decode operand: the model's cache tree with a
-    ``max_slots`` batch axis.  ``write_prefill`` scatters a batch-1 cache
-    (a fresh prefill) into one slot; the per-leaf batch-axis index is
-    detected from the model's cache spec, so every family (dense, MoE,
-    VLM, SSM, hybrid, enc-dec) works unmodified.
+    ``cache`` is the jitted-decode operand.  Dense mode: the model's
+    cache tree with a ``max_slots`` batch axis, ``write_prefill``
+    scatters a batch-1 cache (a fresh prefill) into one slot; the
+    per-leaf batch-axis index is detected from the model's cache spec,
+    so every family (dense, MoE, VLM, SSM, hybrid, enc-dec) works
+    unmodified.  Paged mode (``paged=True``): every leaf's batch axis
+    indexes ``num_blocks + 1`` KV blocks and its sequence axis is one
+    block wide; ``write_prefill`` lands one pool block at a time,
+    ``device_block_tables()`` feeds the Pallas paged-attention gather,
+    and the ``num_blocks`` knob may undersize the pool below
+    ``max_slots * blocks_per_slot`` (real ``OutOfBlocks``).
 
     With ``prefix_blocks > 0`` (and a family whose cache is positional),
     ``prefix_store`` holds block-granular KV snapshots of cached prompt
@@ -140,22 +164,56 @@ class PagedKVCache:
     """
 
     def __init__(self, cfg, max_slots: int, max_seq_len: int,
-                 block_size: int = 16, prefix_blocks: int = 0):
+                 block_size: int = 16, prefix_blocks: int = 0,
+                 num_blocks: Optional[int] = None, paged: bool = False):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.block_size = block_size
-        blocks_per_slot = -(-max_seq_len // block_size)       # ceil
-        self.pool = KVBlockPool(max_slots * blocks_per_slot, block_size)
-        self.cache = T.init_cache(cfg, max_slots, max_seq_len)
+        self.paged = paged
+        self.blocks_per_slot = -(-max_seq_len // block_size)  # ceil
+        worst_case = max_slots * self.blocks_per_slot
+        if num_blocks is None:
+            num_blocks = worst_case
+        if not paged and num_blocks != worst_case:
+            raise ValueError(
+                "dense layout physically allocates the worst case; the "
+                "num_blocks knob needs paged=True")
+        if num_blocks <= 0:
+            raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+        self.pool = KVBlockPool(num_blocks, block_size)
         self._free_slots = deque(range(max_slots))
         self.block_table: Dict[int, List[int]] = {}
         self.seq_len_of: Dict[int, int] = {}
         self._axes = self._batch_axes(cfg, max_seq_len)
-        self._write = jax.jit(self._make_write(), donate_argnums=0)
+        self._seq_axes = self._seq_axis_per_leaf(cfg, max_slots)
+        if paged:
+            if not self.supports_prefix_cache:
+                raise ValueError(
+                    f"family {cfg.family!r} has a non-positional decode "
+                    "cache; paged attention unsupported")
+            if cfg.kv_cache_dtype == "int8":
+                raise ValueError(
+                    "paged attention does not support the int8 KV cache "
+                    "yet — use kv_cache_dtype='bfloat16'")
+            if max_seq_len % block_size != 0:
+                raise ValueError(
+                    f"paged mode needs max_seq_len ({max_seq_len}) to be "
+                    f"a multiple of block_size ({block_size})")
+            # +1 physical block: the trash block free/dummy rows write to
+            self.trash_block = num_blocks
+            self.cache = self._init_store(num_blocks + 1)
+            self._tables = np.full((max_slots, self.blocks_per_slot),
+                                   self.trash_block, np.int32)
+            self._tables_dev = None
+            self._write_block = jax.jit(self._make_write_block(),
+                                        donate_argnums=0)
+            self._save_paged = None       # built with the prefix store
+        else:
+            self.cache = T.init_cache(cfg, max_slots, max_seq_len)
+            self._write = jax.jit(self._make_write(), donate_argnums=0)
 
         # -- prefix store (optional) ----------------------------------------
-        self._seq_axes = self._seq_axis_per_leaf(cfg, max_slots)
         self.prefix_pool: Optional[KVBlockPool] = None
         self.prefix_store = None
         if prefix_blocks > 0:
@@ -165,7 +223,11 @@ class PagedKVCache:
                     "cache; prefix caching unsupported")
             self.prefix_pool = KVBlockPool(prefix_blocks, block_size)
             self.prefix_store = self._init_store(prefix_blocks)
-            self._save = jax.jit(self._make_save(), donate_argnums=0)
+            if paged:
+                self._save_paged = jax.jit(self._make_save_paged(),
+                                           donate_argnums=0)
+            else:
+                self._save = jax.jit(self._make_save(), donate_argnums=0)
             self._load = jax.jit(self._make_load(), donate_argnums=0)
             self._copy = jax.jit(self._make_copy(), donate_argnums=0)
 
@@ -302,6 +364,45 @@ class PagedKVCache:
 
         return copy
 
+    def _make_write_block(self):
+        """storage[bid] <- single(batch-1 cache)[0, pos0:pos0+bs] — the
+        paged half of ``write_prefill``: one block of a freshly prefilled
+        sequence lands in its pool block."""
+        baxes, saxes, bs = self._axes, self._seq_axes, self.block_size
+
+        def write_block(storage, single, bid, pos0):
+            leaves_st, treedef = jax.tree.flatten(storage)
+            leaves_s = jax.tree.leaves(single)
+            out = []
+            for lst, ls, bax, sax in zip(leaves_st, leaves_s, baxes, saxes):
+                piece = jax.lax.dynamic_slice_in_dim(ls, pos0, bs, axis=sax)
+                starts = [jnp.int32(0)] * lst.ndim
+                starts[bax] = bid
+                out.append(jax.lax.dynamic_update_slice(lst, piece, starts))
+            return jax.tree.unflatten(treedef, out)
+
+        return write_block
+
+    def _make_save_paged(self):
+        """prefix_store[dst] <- block_storage[src] — in paged mode a
+        prefix snapshot is a straight block-to-block copy (both trees
+        share the (blocks, block_size) leaf layout)."""
+        baxes = self._axes
+
+        def save(store, storage, src, dst):
+            leaves_st, treedef = jax.tree.flatten(store)
+            leaves_bs = jax.tree.leaves(storage)
+            out = []
+            for lst, lbs, bax in zip(leaves_st, leaves_bs, baxes):
+                piece = jax.lax.dynamic_index_in_dim(lbs, src, axis=bax,
+                                                     keepdims=True)
+                starts = [jnp.int32(0)] * lst.ndim
+                starts[bax] = dst
+                out.append(jax.lax.dynamic_update_slice(lst, piece, starts))
+            return jax.tree.unflatten(treedef, out)
+
+        return save
+
     # -- prefix-store operations ---------------------------------------------
 
     def save_prefix_block(self, slot: int, pos0: int,
@@ -313,9 +414,17 @@ class PagedKVCache:
         assert pos0 + self.block_size <= self.max_seq_len, \
             f"prefix block [{pos0}, {pos0 + self.block_size}) overruns cache"
         bid = self.prefix_pool.alloc() if into is None else into
-        self.prefix_store = self._save(
-            self.prefix_store, self.cache, jnp.int32(slot), jnp.int32(bid),
-            jnp.int32(pos0))
+        if self.paged:
+            # aligned window == exactly one pool block of this slot
+            assert pos0 % self.block_size == 0, pos0
+            src = self.block_table[slot][pos0 // self.block_size]
+            self.prefix_store = self._save_paged(
+                self.prefix_store, self.cache, jnp.int32(src),
+                jnp.int32(bid))
+        else:
+            self.prefix_store = self._save(
+                self.prefix_store, self.cache, jnp.int32(slot),
+                jnp.int32(bid), jnp.int32(pos0))
         return bid
 
     def load_prefix_blocks(self, cache1, blocks: Sequence[int]):
@@ -347,7 +456,10 @@ class PagedKVCache:
         return max(1, -(-n_tokens // self.block_size))
 
     def alloc_slot(self, prompt_len: int) -> int:
-        """Claim a slot and the blocks backing its prompt positions."""
+        """Claim a slot and the blocks backing its prompt positions.
+        On block exhaustion the slot is returned and any partially
+        allocated blocks are released before ``OutOfBlocks`` propagates —
+        the caller sees an all-or-nothing admission."""
         if prompt_len > self.max_seq_len:
             raise ValueError(
                 f"prompt ({prompt_len}) exceeds max_seq_len "
@@ -355,14 +467,19 @@ class PagedKVCache:
         if not self._free_slots:
             raise OutOfBlocks("no free slot")
         slot = self._free_slots.popleft()
+        blocks: List[int] = []
         try:
-            blocks = [self.pool.alloc()
-                      for _ in range(self._blocks_for(prompt_len))]
+            for _ in range(self._blocks_for(prompt_len)):
+                blocks.append(self.pool.alloc())
         except OutOfBlocks:
+            self.pool.free(blocks)
             self._free_slots.appendleft(slot)
             raise
         self.block_table[slot] = blocks
         self.seq_len_of[slot] = prompt_len
+        if self.paged:
+            self._tables[slot, :len(blocks)] = blocks
+            self._tables_dev = None
         return slot
 
     def ensure_capacity(self, slot: int, n_tokens: int) -> None:
@@ -375,6 +492,9 @@ class PagedKVCache:
         table = self.block_table[slot]
         while len(table) * self.block_size < n_tokens:
             table.append(self.pool.alloc())
+            if self.paged:
+                self._tables[slot, len(table) - 1] = table[-1]
+                self._tables_dev = None
         self.seq_len_of[slot] = max(self.seq_len_of[slot], n_tokens)
 
     def free_slot(self, slot: int) -> None:
@@ -382,13 +502,39 @@ class PagedKVCache:
         self.pool.free(self.block_table.pop(slot))
         del self.seq_len_of[slot]
         self._free_slots.append(slot)
+        if self.paged:
+            self._tables[slot, :] = self.trash_block
+            self._tables_dev = None
+
+    def device_block_tables(self) -> jnp.ndarray:
+        """The (max_slots, blocks_per_slot) int32 block-table tensor the
+        paged decode step gathers through; uploaded lazily after ledger
+        mutations.  Unbacked entries name the trash block."""
+        assert self.paged, "block tables are device-resident in paged mode"
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self._tables)
+        return self._tables_dev
 
     def write_prefill(self, slot: int, single_cache) -> None:
-        """Scatter a batch-1 prefilled cache into ``slot`` of the pool."""
+        """Scatter a batch-1 prefilled cache into ``slot``'s storage: the
+        whole stripe in dense mode, one pool block at a time in paged
+        mode (only the blocks the slot's table actually maps)."""
+        if self.paged:
+            bs = self.block_size
+            for k, bid in enumerate(self.block_table[slot]):
+                self.cache = self._write_block(
+                    self.cache, single_cache, jnp.int32(bid),
+                    jnp.int32(k * bs))
+            return
         self.cache = self._write(self.cache, single_cache,
                                  jnp.asarray(slot, jnp.int32))
 
     # -- telemetry -----------------------------------------------------------
+
+    def kv_bytes(self) -> int:
+        """Physical bytes resident for the decode KV storage (the number
+        the paged/dense benchmark holds fixed while varying concurrency)."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
 
     def occupancy(self) -> Dict[str, float]:
         occ = {
@@ -398,6 +544,8 @@ class PagedKVCache:
             "blocks_total": self.pool.num_blocks,
             "block_high_water": self.pool.high_water,
             "block_utilization": self.pool.in_use / self.pool.num_blocks,
+            "paged": self.paged,
+            "kv_bytes_resident": self.kv_bytes(),
         }
         if self.prefix_pool is not None:
             occ["prefix_blocks_in_use"] = self.prefix_pool.in_use

@@ -23,6 +23,21 @@ sequence was served from, and every admitted prompt is inserted back
 into the radix tree right after its prefill, making its KV available to
 the next request that shares it.
 
+With a paged engine the KV pool can be sized below worst case, so
+``OutOfBlocks`` is a real event on both sides of the loop and neither
+may lose a request:
+
+    admission — the head request stays in the queue until its prefill
+        blocks actually allocate; on ``OutOfBlocks`` its prefix pins are
+        released, it returns to the *head*, and admission stops for the
+        round (a retirement must free blocks first);
+    decode    — when a live sequence cannot grow by one block, the most
+        recently admitted *other* sequence is preempted (slot and blocks
+        freed, prefix pins released, request re-queued at the head); a
+        preempted request resumes later by re-prefilling its prompt plus
+        the tokens it already emitted — recompute-style preemption, so
+        no KV swap space is needed and greedy outputs are unchanged.
+
 This replaces the seed engine's run-everything-to-the-global-max loop:
 short requests stop costing decode work the step they finish, and
 ``decode_steps`` accounting makes the saving testable.
@@ -37,6 +52,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.kvcache import OutOfBlocks
 from repro.serving.metrics import ServingMetrics
 
 
@@ -65,6 +81,8 @@ class Scheduler:
         self.active: Dict[int, _ReqState] = {}          # slot -> state
         self.done: Dict[int, _ReqState] = {}            # rid  -> state
         self.draining = False
+        self.preemptions = 0               # decode-time OutOfBlocks defers
+        self.admission_stalls = 0          # admit-time OutOfBlocks retries
         self._next_rid = 0
         # eviction counting is per-scheduler; the cache outlives us
         pc = engine.prefix_cache
@@ -83,6 +101,10 @@ class Scheduler:
     def submit(self, request: Request) -> int:
         if self.draining:
             raise RuntimeError("scheduler is draining; admission closed")
+        if len(request.prompt) == 0:
+            raise ValueError(
+                "empty prompt: a request needs at least one token "
+                "(the first sample comes from the prefill logits)")
         sp = request.params
         need = len(request.prompt) + sp.max_new_tokens
         if need > self.engine.max_seq_len:
@@ -90,6 +112,12 @@ class Scheduler:
                 f"prompt ({len(request.prompt)}) + max_new_tokens "
                 f"({sp.max_new_tokens}) exceeds max_seq_len "
                 f"({self.engine.max_seq_len})")
+        kv = self.engine.kv
+        if kv._blocks_for(need) > kv.pool.num_blocks:
+            raise ValueError(
+                f"request needs {kv._blocks_for(need)} KV blocks at full "
+                f"length but the pool holds {kv.pool.num_blocks}; it could "
+                "never be scheduled even alone")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(_ReqState(rid, request))
@@ -113,25 +141,55 @@ class Scheduler:
 
     def _admit(self) -> None:
         while self.queue and self.engine.kv.free_slot_count > 0:
-            st = self.queue.popleft()
-            req = st.request
+            st = self.queue[0]                      # peek: pop only once
+            req = st.request                        # the slot is secured
             if req.params.max_new_tokens <= 0:      # nothing to generate
+                self.queue.popleft()
                 st.finish_reason = "length"
                 self.done[st.rid] = st
                 self.metrics.record_finish(st.rid, 0, "length")
                 continue
+            resumed = bool(st.emitted)              # preempted earlier
+            # a resumed request re-prefills prompt + all emitted tokens
+            # except the last, which is still waiting to be fed to decode
+            seq = (req.prompt if not resumed else
+                   np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(st.emitted[:-1], np.int32)]))
+            kv = self.engine.kv
+            if kv.pool.available < kv._blocks_for(len(seq)):
+                # KV pool dry: stall BEFORE touching the prefix cache so
+                # a request parked at the head doesn't re-count lookup
+                # stats (or churn pins) once per retry; a retirement
+                # must return blocks before this can succeed
+                self.admission_stalls += 1
+                break
             pc = self.prefix_cache
+            cached_len, blocks = (0, [])
             if pc is not None:
-                st.cached_len, st.prefix_blocks = pc.lookup(req.prompt)
-            st.slot, last_logits = self.engine.prefill_into_slot(
-                req.prompt, req.encoder_input,
-                start_pos=st.cached_len, prefix_blocks=st.prefix_blocks)
+                cached_len, blocks = pc.lookup(seq)
+            try:
+                st.slot, last_logits = self.engine.prefill_into_slot(
+                    seq, req.encoder_input,
+                    start_pos=cached_len, prefix_blocks=blocks)
+            except OutOfBlocks:
+                # unreachable given the pre-check, but never lose the
+                # request or its pins if it ever fires
+                if pc is not None and blocks:
+                    pc.release(blocks)
+                self.admission_stalls += 1
+                break
+            self.queue.popleft()
+            st.cached_len, st.prefix_blocks = cached_len, blocks
             if pc is not None:
-                pc.insert(req.prompt, st.slot)
-                self.metrics.record_prefix(st.cached_len, len(req.prompt))
+                pc.insert(seq, st.slot)
+                if not resumed:            # one prefix outcome per request
+                    self.metrics.record_prefix(cached_len, len(seq))
                 self.metrics.prefix_evictions = (pc.stats.evicted_blocks
                                                  - self._evict_base)
-            st.pos = len(req.prompt)
+            st.pos = len(seq)
+            if resumed:                             # last token still pending
+                self.active[st.slot] = st
+                continue
             tok = int(self.engine.sample_tokens(
                 last_logits[None],
                 np.asarray([req.params.temperature], np.float32),
@@ -140,6 +198,27 @@ class Scheduler:
             self.metrics.record_first_token(st.rid)
             if not self._maybe_retire(st, tok):
                 self.active[st.slot] = st
+
+    def _preempt(self, st: _ReqState) -> None:
+        """Defer a live request: free its slot and KV blocks, release its
+        prefix pins, and put it back at the head of the queue.  It will
+        resume by re-prefilling prompt + emitted tokens (recompute-style
+        preemption) once blocks are available again."""
+        self.active.pop(st.slot, None)
+        self.engine.free_slot(st.slot)
+        if st.prefix_blocks:
+            self.prefix_cache.release(st.prefix_blocks)
+            st.prefix_blocks = []
+        st.slot = -1
+        self.queue.appendleft(st)
+        self.preemptions += 1
+
+    def _pick_victim(self, exclude_slot: int) -> Optional[_ReqState]:
+        """Most recently admitted live request other than the one trying
+        to grow — freeing the youngest wastes the least finished work."""
+        candidates = [st for slot, st in self.active.items()
+                      if slot != exclude_slot]
+        return max(candidates, key=lambda st: st.rid) if candidates else None
 
     def _maybe_retire(self, st: _ReqState, tok: int) -> bool:
         sp = st.request.params
@@ -160,19 +239,47 @@ class Scheduler:
         self.metrics.record_finish(st.rid, len(st.emitted), reason)
         return True
 
+    def _grow_or_preempt(self) -> None:
+        """Back every live sequence's next token position with a block.
+        When the pool is dry, preempt the youngest other request and
+        retry; a sequence with nobody left to evict defers itself (it
+        can always fit alone later — submit() guarantees that)."""
+        for slot in sorted(self.active):
+            st = self.active.get(slot)
+            if st is None:                 # preempted earlier this pass
+                continue
+            while True:
+                try:
+                    self.engine.kv.ensure_capacity(slot, st.pos + 1)
+                    break
+                except OutOfBlocks:
+                    victim = self._pick_victim(exclude_slot=slot)
+                    self._preempt(victim if victim is not None else st)
+                    if victim is None:
+                        break              # st itself deferred; move on
+
     def step(self) -> bool:
         """Admit into free slots, then decode one token for every live
         sequence.  Returns False when there was nothing to do."""
         self._admit()
         if not self.active:
+            if self.queue:
+                # nothing live, nothing admitted: with the pool idle this
+                # is unservable demand, not a transient — fail loudly
+                # instead of spinning forever
+                raise RuntimeError(
+                    "admission deadlock: queue non-empty, no active "
+                    "sequences, and prefill still cannot get blocks")
             return False
+        self._grow_or_preempt()
+        if not self.active:
+            return bool(self.queue)        # everything deferred; retry
         S = self.max_slots
         tokens = np.zeros(S, np.int32)
         positions = np.zeros(S, np.int32)
         temps = np.ones(S, np.float32)
         greedy = np.zeros(S, bool)
         for slot, st in self.active.items():
-            self.engine.kv.ensure_capacity(slot, st.pos + 1)
             tokens[slot] = st.emitted[-1]
             positions[slot] = st.pos
             temps[slot] = st.request.params.temperature

@@ -203,6 +203,84 @@ def test_submit_rejects_overflow(qwen):
 
 
 # ---------------------------------------------------------------------------
+# admission-path hardening (regressions)
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_empty_prompt(qwen):
+    """Regression: an empty prompt used to sail through submit() and die
+    later on the engine's bare `assert 0 <= start_pos < P`."""
+    sched = Scheduler(_engine(qwen))
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(np.empty(0, np.int32),
+                             SamplingParams(max_new_tokens=2)))
+    # the engine-internal invariant is still an assert
+    with pytest.raises(AssertionError):
+        _engine(qwen).prefill_into_slot(np.empty(0, np.int32))
+
+
+def test_temperature_zero_is_greedy_not_inf(qwen):
+    """Regression: temperature=0.0 with greedy=False divided logits by
+    the 1e-4 clamp and overflowed into categorical; it must sample
+    exactly like greedy instead."""
+    eng = _engine(qwen)
+    logits = np.array([[1.0, 5.0, 2.0], [7.0, -1.0, 3.0]], np.float32)
+    toks = eng.sample_tokens(logits, np.zeros(2, np.float32),
+                             np.zeros(2, bool))
+    np.testing.assert_array_equal(toks, [1, 0])
+    # end-to-end: a temperature-0 request matches the greedy run
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    ref = _engine(qwen).generate(
+        [Request(prompt, SamplingParams(max_new_tokens=5, greedy=True))])[0]
+    out = _engine(qwen).generate(
+        [Request(prompt, SamplingParams(max_new_tokens=5,
+                                        temperature=0.0))])[0]
+    np.testing.assert_array_equal(out, ref)
+    # a hot stochastic row in the same batch must not disturb row 1
+    outs = _engine(qwen).generate([
+        Request(np.array([7, 7], np.int32),
+                SamplingParams(max_new_tokens=5, temperature=5.0)),
+        Request(prompt, SamplingParams(max_new_tokens=5, temperature=0.0))])
+    np.testing.assert_array_equal(outs[1], ref)
+
+
+def test_admission_out_of_blocks_requeues_instead_of_dropping(qwen):
+    """Regression: `_admit` used to pop the request, pin prefix blocks,
+    and let OutOfBlocks from alloc_slot fly — the request vanished
+    (output() raised KeyError) and its pins leaked.  With an undersized
+    paged pool every submitted request must still complete."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, max_seq_len=32, max_slots=4,
+                        kv_block_size=8, paged=True, num_blocks=4,
+                        prefix_cache_blocks=8)
+    sched = Scheduler(eng)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, 10, dtype=np.int32)
+    rids = [sched.submit(Request(
+        np.concatenate([shared, rng.integers(0, cfg.vocab_size, 4 + i,
+                                             dtype=np.int32)]),
+        SamplingParams(max_new_tokens=6, greedy=True))) for i in range(5)]
+    sched.run()
+    assert sched.admission_stalls > 0          # the bug path was exercised
+    for rid in rids:                           # ...and nobody was dropped
+        assert len(sched.output(rid)) == 6
+    assert eng.kv.pool.in_use == 0
+    eng.prefix_cache.evict(10 ** 9)            # all pins released at drain
+    assert eng.kv.prefix_pool.in_use == 0
+
+
+def test_submit_rejects_request_larger_than_pool(qwen):
+    """A request that could never fit even alone fails at submit, not as
+    an undiagnosable admission deadlock later."""
+    cfg, params = qwen
+    eng = ServingEngine(cfg, params, max_seq_len=48, max_slots=2,
+                        kv_block_size=8, paged=True, num_blocks=3)
+    sched = Scheduler(eng)
+    with pytest.raises(ValueError, match="never be scheduled"):
+        sched.submit(Request(np.arange(30, dtype=np.int32),
+                             SamplingParams(max_new_tokens=10)))
+
+
+# ---------------------------------------------------------------------------
 # gateway
 # ---------------------------------------------------------------------------
 
