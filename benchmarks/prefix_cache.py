@@ -92,6 +92,8 @@ def run(quick: bool = True, out_path: str = "BENCH_prefix_cache.json"):
 
     record = {
         "arch": arch, "quick": quick, "n_requests": n_requests,
+        # true completion count (not config): what run.py --check gates on
+        "requests_completed": len(warm_out),
         "system_prompt_tokens": system_len, "suffix_tokens": suffix_len,
         "cold": {"ttft_ms_mean": cold_ttft_ms,
                  "prefill_tokens_executed_per_request": cold_tokens},

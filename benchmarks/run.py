@@ -78,12 +78,61 @@ def _kernel_micro(rows):
                  "jnp reference path (Pallas ssd_scan = TPU hot path)"))
 
 
+def _check_bench_json() -> list:
+    """CI guard: every emitted BENCH_*.json must carry a nonzero
+    completed-request count, and ``bit_identical_outputs`` — where the
+    benchmark records one — must be true.  A benchmark that silently
+    stopped completing work or lost bit-identity fails the build instead
+    of shipping a green-looking artifact."""
+    import glob
+
+    def dicts(o):
+        if isinstance(o, dict):
+            yield o
+            for v in o.values():
+                yield from dicts(v)
+        elif isinstance(o, list):
+            for v in o:
+                yield from dicts(v)
+
+    errors = []
+    paths = sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        return ["--check: no BENCH_*.json artifacts found"]
+    for p in paths:
+        try:
+            with open(p) as f:
+                data = json.load(f)
+        except Exception as e:                       # noqa: BLE001
+            errors.append(f"{p}: unreadable ({e})")
+            continue
+        bits = [d["bit_identical_outputs"] for d in dicts(data)
+                if "bit_identical_outputs" in d]
+        if any(v is not True for v in bits):
+            errors.append(f"{p}: bit_identical_outputs is not true")
+        # true completion counters only — n_requests is configuration
+        # (always nonzero by construction) and would make this vacuous
+        counts = [d[k] for d in dicts(data)
+                  for k in ("requests_completed", "completed")
+                  if isinstance(d.get(k), (int, float))]
+        if not counts:
+            errors.append(f"{p}: no completed-request count found")
+        elif max(counts) <= 0:
+            errors.append(f"{p}: zero completed requests")
+    return errors
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", help="comma list: scaling,overhead,ps,physics,"
                                    "roofline,kernels,serving,prefix_cache,"
-                                   "paged_attention")
+                                   "paged_attention,batched_prefill")
+    ap.add_argument("--check", action="store_true",
+                    help="after running, validate every BENCH_*.json in "
+                         "the cwd (bit_identical_outputs true where "
+                         "present, nonzero completed requests) and exit "
+                         "nonzero on any failure")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -140,6 +189,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append(("paged_attention/FAILED", 0.0, "see stderr"))
+    if want("batched_prefill"):
+        from benchmarks import batched_prefill
+        try:
+            rows += batched_prefill.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("batched_prefill/FAILED", 0.0, "see stderr"))
     if want("physics"):
         from benchmarks import physics_validation
         try:
@@ -154,6 +210,16 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.check:
+        errors = [f"{name}: benchmark failed" for name, _, _ in rows
+                  if name.endswith("/FAILED")]
+        errors += _check_bench_json()
+        if errors:
+            for e in errors:
+                print(f"CHECK FAILED: {e}", file=sys.stderr)
+            sys.exit(1)
+        print("check: all BENCH_*.json artifacts healthy")
 
 
 if __name__ == "__main__":

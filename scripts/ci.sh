@@ -1,9 +1,13 @@
 #!/usr/bin/env sh
 # One-invocation verify recipe: the repo's tier-1 test command (ROADMAP.md),
 # then fast smokes of the prefix-cache benchmark (cold/warm TTFT + the
-# bit-identity assertion inside it) and the paged-attention benchmark
+# bit-identity assertion inside it), the paged-attention benchmark
 # (paged > dense concurrency at equal KV bytes, undersized-pool run with
-# no drops / no leaked pins, greedy bit-identity — each is asserted).
+# no drops / no leaked pins, greedy bit-identity — each is asserted), and
+# the batched-prefill benchmark via `benchmarks.run --check`, which also
+# validates every emitted BENCH_*.json artifact (bit_identical_outputs
+# true where present, nonzero completed requests) so a silently-broken
+# benchmark fails the build.
 # Usage: scripts/ci.sh [extra pytest args]
 set -e
 cd "$(dirname "$0")/.."
@@ -11,3 +15,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # invoked directly (not via benchmarks.run) so a failure fails the build
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.prefix_cache
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.paged_attention
+# --check exits nonzero on a FAILED row or an unhealthy BENCH_*.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
+    --only batched_prefill --check

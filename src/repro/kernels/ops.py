@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_attention as _pa
+from repro.kernels import paged_prefill as _pp
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd_scan as _ssd
 
@@ -80,6 +81,38 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
                               window=window, softcap=softcap, scale=scale,
                               interpret=interpret)
     return out.reshape(B, 1, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "interpret"))
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, start_pos,
+                            q_lens, *, window: Optional[int] = None,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None,
+                            interpret: Optional[bool] = None):
+    """Model-layout paged chunked-prefill attention.
+
+    q: (B, C, H, D) — a chunk of C query tokens per sequence, H = G * KV
+    (GQA); k_pages, v_pages: (num_pages, page_size, KV, D) block storage
+    with the chunk's own K/V already scattered in; block_tables:
+    (B, pages_per_seq) int32; start_pos: (B,) absolute position of each
+    row's first query token; q_lens: (B,) valid query tokens per row
+    (rows/tokens past q_lens are padding and return zeros).
+    Returns (B, C, H, D).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, C, H, D = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    # fold (C, G) -> CG rows grouped per KV head: row c*G+g
+    qf = q.reshape(B, C, KV, G, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, KV, C * G, D)
+    out = _pp.paged_prefill(qf, k_pages, v_pages, block_tables, start_pos,
+                            q_lens, group=G, window=window, softcap=softcap,
+                            scale=scale, interpret=interpret)
+    return out.reshape(B, KV, C, G, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, C, H, D)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -72,6 +72,49 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     return jnp.where(any_valid, out, 0.0).astype(q.dtype)
 
 
+def paged_prefill_ref(q, k_pages, v_pages, block_tables, start_pos, q_lens,
+                      *, scale: Optional[float] = None,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None):
+    """Oracle for the paged chunked-prefill kernel: gather every row's
+    pages back into a dense (B, T, KV, D) layout, then run naive masked
+    softmax attention for the whole query chunk.
+
+    q: (B, C, KV, G, D) — chunk of query tokens per row, GQA-grouped;
+    k_pages, v_pages: (num_pages, page_size, KV, D) block storage holding
+    the chunk's own K/V at its absolute positions; block_tables:
+    (B, pages_per_seq) int32; start_pos: (B,) absolute position of each
+    row's first query; q_lens: (B,) valid query tokens per row (padding
+    rows/tokens return zeros).  Returns (B, C, KV, G, D).
+    """
+    B, C, KV, G, D = q.shape
+    NP, page_size = k_pages.shape[0], k_pages.shape[1]
+    pages_per_seq = block_tables.shape[1]
+    T = pages_per_seq * page_size
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    tables = jnp.clip(block_tables.astype(jnp.int32), 0, NP - 1)
+    k = k_pages[tables.reshape(-1)].reshape(B, T, KV, D)
+    v = v_pages[tables.reshape(-1)].reshape(B, T, KV, D)
+    s = jnp.einsum("bckgd,btkd->bkgct", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = (start_pos.astype(jnp.int32)[:, None]
+            + jnp.arange(C)[None, :])                    # (B, C)
+    kpos = jnp.arange(T)[None, None, :]                  # (1, 1, T)
+    mask = kpos <= qpos[:, :, None]                      # causal
+    mask &= (jnp.arange(C)[None, :]
+             < q_lens.astype(jnp.int32)[:, None])[:, :, None]
+    if window is not None:
+        mask &= (qpos[:, :, None] - kpos) < window
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgct,btkd->bckgd", p, v.astype(jnp.float32))
+    any_valid = mask.any(axis=2)[:, :, None, None, None]
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)
+
+
 def ssd_scan_ref(x, dt, A, B, C, chunk: int, initial_state=None):
     """Chunked SSD oracle — delegates to the model-level reference, which is
     itself validated against the naive recurrence in tests/test_ssm.py."""

@@ -41,6 +41,9 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="KV pool size in blocks (paged only; below "
                          "worst case = memory oversubscription)")
+    ap.add_argument("--prefill-batch", type=int, default=4,
+                    help="max co-admitted prompts per scheduler round "
+                         "(batched multi-slot prefill; 1 = one-at-a-time)")
     ap.add_argument("--prefix-cache-blocks", type=int, default=64,
                     help="per-replica prefix-store KV blocks (0 disables)")
     ap.add_argument("--shared-prefix", type=int, default=0,
@@ -62,9 +65,16 @@ def main(argv=None):
     engines = [ServingEngine(cfg, params, max_seq_len=args.max_seq_len,
                              max_slots=args.max_slots, rng_seed=r,
                              prefix_cache_blocks=args.prefix_cache_blocks,
-                             paged=args.paged, num_blocks=args.num_blocks)
+                             paged=args.paged, num_blocks=args.num_blocks,
+                             prefill_batch=args.prefill_batch)
                for r in range(args.replicas)]
     gateway = ReplicaGateway.from_engines(engines)
+    print(f"run config: arch={cfg.name} replicas={args.replicas} "
+          f"max_slots={args.max_slots} max_seq_len={args.max_seq_len} "
+          f"paged={args.paged} num_blocks={args.num_blocks} "
+          f"prefill_batch={engines[0].prefill_batch} "
+          f"prefill_chunk={engines[0].prefill_chunk} "
+          f"prefix_cache_blocks={args.prefix_cache_blocks}")
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix,

@@ -81,14 +81,14 @@ def _stack_init(fn, keys):
 
 def _apply_attn_mlp_layer(p, cfg, x, *, window, positions=None, causal=True,
                           cache=None, cache_index=None, encoder_out=None,
-                          use_rope=True, block_tables=None):
+                          use_rope=True, block_tables=None, q_lens=None):
     """Pre-norm attention + (cross-attention) + MLP/MoE.  Returns
     (x, new_cache, aux)."""
     h = _norm(cfg, p["ln1"], x)
     a, new_cache = attn.attention_block(
         p["attn"], cfg, h, positions=positions, causal=causal, window=window,
         cache=cache, cache_index=cache_index, use_rope=use_rope,
-        block_tables=block_tables)
+        block_tables=block_tables, q_lens=q_lens)
     if cfg.post_block_norm:
         a = _norm(cfg, p["post_ln1"], a)
     x = x + a
@@ -489,6 +489,74 @@ def decode_step(params, cfg, batch: Dict[str, Any], *,
             new_cache["tail_layers"] = ntc
     else:
         raise ValueError(cfg.family)
+
+    x = _norm(cfg, params["final_norm"], x)
+    logits = (nn.unembed(params["embed"], x) if cfg.tie_embeddings
+              else nn.linear(params["lm_head"], x, dtype=dt).astype(jnp.float32))
+    logits = nn.softcap(logits, cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked-prefill step (a (B, C) query tile against block storage)
+# ---------------------------------------------------------------------------
+
+def prefill_step(params, cfg, batch: Dict[str, Any], *,
+                 long_context: bool = False) -> Tuple[jnp.ndarray, Any]:
+    """One chunk of batched paged prefill: ``C`` tokens for every row.
+
+    batch: tokens (B, C); positions (B,) — each row's *start* position
+    (row b's token t sits at absolute position ``positions[b] + t``);
+    q_lens (B,) — valid tokens per row (padding tokens and whole padding
+    rows are masked and their K/V routed to the trash block); cache —
+    paged block storage; block_tables (B, blocks_per_slot).
+
+    The chunk's K/V are written straight into each row's pool blocks and
+    attention gathers the full history (earlier chunks + this one)
+    through the tables with the Pallas paged-prefill kernel, so paged
+    prefill never materializes a dense ``max_seq_len`` stripe.  Returns
+    (logits (B, C, V) f32, new_cache); logits at padding positions are
+    garbage — callers index only real tokens.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    tokens, starts, cache = batch["tokens"], batch["positions"], batch["cache"]
+    q_lens = batch["q_lens"]
+    tables = batch["block_tables"]
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError(
+            f"paged prefill needs a positional attention cache; family "
+            f"{cfg.family!r} unsupported")
+    B, C = tokens.shape
+    positions = (starts.astype(jnp.int32)[:, None]
+                 + jnp.arange(C, dtype=jnp.int32)[None])           # (B, C)
+
+    x = nn.embed(params["embed"], tokens, dtype=dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    if cfg.max_pos_embed:
+        safe = jnp.clip(positions, 0, cfg.max_pos_embed - 1)
+        x = x + params["pos_embed"].astype(dt)[safe]
+
+    windows = layer_pattern(cfg, long_context)
+    use_rope = cfg.max_pos_embed == 0
+    new_cache = dict(cache)
+
+    def body(x, xs):
+        gp, gc = xs
+        ncs = []
+        for i, win in enumerate(windows):
+            lp = jax.tree.map(lambda a: a[i], gp)
+            lc = jax.tree.map(lambda a: a[i], gc)
+            x, nc_i, _ = _apply_attn_mlp_layer(
+                lp, cfg, x, window=win, positions=positions, cache=lc,
+                cache_index=starts, use_rope=use_rope,
+                block_tables=tables, q_lens=q_lens)
+            ncs.append(nc_i)
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+
+    x, nc = _scan_layers(body, x, params["layers"], (cache["layers"],),
+                         False, cfg.scan_layers)
+    new_cache["layers"] = nc
 
     x = _norm(cfg, params["final_norm"], x)
     logits = (nn.unembed(params["embed"], x) if cfg.tie_embeddings

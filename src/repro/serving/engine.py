@@ -5,24 +5,39 @@ serves a model with continuously batched requests.  The engine owns the
 pooled decode cache (a :class:`~repro.serving.kvcache.PagedKVCache` over
 ``max_slots`` sequences) and exposes the primitives the scheduler drives:
 
-* ``prefill_into_slot`` — replay one prompt through ``decode_step`` in
-  fixed-size *chunks* under a ``lax.scan`` at batch 1, scatter the
-  resulting cache into a freed slot, and return the last-token logits
-  (the first sample comes from these, so TTFT is one prefill, not one
-  full decode round).  Chunking bounds recompiles to ONE prefill program
-  regardless of prompt length, and the ``start_pos`` resume path lets a
-  prompt whose prefix is already resident in the prefix store skip
-  straight to its first uncached token: the cached KV blocks are loaded
-  into the batch-1 cache and only the suffix chunks execute.
+* ``prefill_into_slots`` — co-prefill a *batch* of prompts, one
+  fixed-shape chunked program per round.  In paged mode every chunk's
+  K/V is written **straight into pool blocks** through the slots' block
+  tables (the Pallas paged-prefill kernel gathers the history back out),
+  so paged prefill never allocates the transient dense ``max_seq_len``
+  batch-1 stripe the old path scattered from.  Prompts are length-sorted
+  into waves of ``prefill_batch`` rows so similar suffix lengths share
+  rounds; rows whose prompt ran out ride along as ``q_len = 0`` padding
+  the kernel skips at page granularity.  Per-row ``start_pos`` resumes
+  from a cached prefix (block-to-block loads from the prefix store) and
+  each row's last *real* token's logits are extracted for the first
+  sample.  Dense mode serves the same interface through the original
+  batch-1 ``lax.scan`` chunk replay (the correctness oracle).
+* ``prefill_into_slot`` — single-prompt compatibility wrapper.
 * ``decode_once`` — one token for every slot against the pooled cache;
   ``serve_step`` here is the exact program the decode dry-run shapes
-  lower.
+  lower.  Logits stay **on device**; the host transfer is deferred to
+  ``sample_tokens`` so each decode step costs one sync, not two.
 
 Sampling is vectorized per slot (``sample_tokens``): each row gets its own
 temperature / greedy flag, fixing the seed bug where ``requests[0].params``
 was applied to the whole batch.  ``generate()`` survives as a thin
 compatibility wrapper that routes through the continuous-batching
 scheduler.
+
+Telemetry: ``prefill_tokens`` counts real prompt tokens,
+``prefill_tokens_executed`` counts every token position the compiled
+prefill programs actually ran (chunk padding and dummy batch rows
+included — the FLOPs proxy), and ``prefill_tokens_padding`` is their
+difference.  ``transient_prefill_bytes`` records the peak size of any
+batch-1 staging cache a prefill allocated: nonzero for the dense path,
+**always zero in paged mode** — the assertion behind the no-dense-stripe
+guarantee.
 """
 from __future__ import annotations
 
@@ -86,13 +101,17 @@ class ServingEngine:
     def __init__(self, cfg, params, max_seq_len: int, max_slots: int = 8,
                  rng_seed: int = 0, kv_block_size: int = 16,
                  prefix_cache_blocks: int = 0, prefill_chunk: int = 16,
-                 paged: bool = False, num_blocks: Optional[int] = None):
+                 paged: bool = False, num_blocks: Optional[int] = None,
+                 prefill_batch: int = 4):
         self.cfg = cfg
         self.params = params
         self.max_seq_len = max_seq_len
         self.max_slots = max_slots
         self.key = jax.random.PRNGKey(rng_seed)
         self.prefill_chunk = prefill_chunk
+        # rows per compiled paged-prefill program (co-admission width);
+        # dense mode prefills serially whatever the batch size
+        self.prefill_batch = max(1, min(prefill_batch, max_slots))
         self.paged = paged
         want_prefix = prefix_cache_blocks > 0
         self.kv = PagedKVCache(
@@ -106,9 +125,23 @@ class ServingEngine:
             self.prefix_cache = PrefixCache(self.kv)
         self.decode_steps = 0                # accounting (tested)
         self.prefill_tokens = 0              # real tokens run through prefill
-        self.prefill_tokens_executed = 0     # incl. chunk padding (FLOPs proxy)
+        self.prefill_tokens_executed = 0     # incl. padding (FLOPs proxy)
+        self.prefill_tokens_padding = 0      # executed - real
         self.cached_prefix_tokens = 0        # tokens served from the store
+        self.transient_prefill_bytes = 0     # peak batch-1 staging cache
         self._step = jax.jit(make_serve_step(cfg))
+
+        if paged:
+            def prefill_paged(params, tokens, starts, q_lens, cache, tables):
+                """One co-prefill round: (Bp, C) chunk straight into the
+                rows' pool blocks.  ONE compiled program for every wave
+                and every prompt length (shapes are all fixed)."""
+                batch = {"tokens": tokens, "positions": starts,
+                         "q_lens": q_lens, "cache": cache,
+                         "block_tables": tables}
+                return T.prefill_step(params, cfg, batch)
+
+            self._prefill_paged = jax.jit(prefill_paged, donate_argnums=4)
 
         def prefill(params, tokens, cache, encoder_output):
             """Replay (B, P) prompt tokens through decode_step via scan."""
@@ -187,7 +220,7 @@ class ServingEngine:
         """Prefill one prompt into a free slot of the pooled cache.
 
         ``start_pos > 0`` resumes from a cached prefix: ``prefix_blocks``
-        (from :meth:`PrefixCache.lookup`) are loaded into positions
+        (from :meth:`PrefixCache.lookup`) back positions
         ``[0, start_pos)`` and only ``prompt[start_pos:]`` runs through
         the model, in ``prefill_chunk``-sized pieces.
 
@@ -195,16 +228,142 @@ class ServingEngine:
         first new token from these logits, so admission costs one
         (suffix) prefill and the request joins the very next decode round.
         """
-        prompt = np.asarray(prompt, np.int32)
+        [(slot, last)] = self.prefill_into_slots(
+            [prompt], [encoder_input], start_pos=[start_pos],
+            prefix_blocks=[list(prefix_blocks)])
+        return slot, last
+
+    def prefill_into_slots(self, prompts: Sequence[np.ndarray],
+                           encoder_inputs: Optional[Sequence] = None,
+                           *, start_pos: Optional[Sequence[int]] = None,
+                           prefix_blocks: Optional[Sequence] = None,
+                           ) -> List[Tuple[int, np.ndarray]]:
+        """Co-prefill a batch of prompts into free slots.
+
+        Paged mode runs all of them through ONE compiled chunked program
+        per round: prompts are length-sorted into waves of at most
+        ``prefill_batch`` rows, each round executes a fixed ``(Bp, C)``
+        chunk whose K/V lands straight in the slots' pool blocks (no
+        dense stripe), and rows whose suffix is exhausted ride along as
+        ``q_len = 0`` padding.  Slot allocation is all-or-nothing: on
+        ``OutOfBlocks`` every slot claimed so far is released before the
+        error propagates.  Dense mode (and enc-dec) prefills serially
+        through the batch-1 scan path — identical math, so greedy
+        outputs are bit-identical across the two layouts.
+
+        Returns ``[(slot, last_logits (V,))]`` in **input order**.
+        """
+        n = len(prompts)
+        prompts = [np.asarray(p, np.int32) for p in prompts]
+        encoder_inputs = encoder_inputs or [None] * n
+        start_pos = list(start_pos) if start_pos is not None else [0] * n
+        prefix_blocks = (list(prefix_blocks) if prefix_blocks is not None
+                         else [()] * n)
+        for p, sp in zip(prompts, start_pos):
+            assert 0 <= sp < len(p), (sp, len(p))
+        if not self.paged:
+            out: List[Tuple[int, np.ndarray]] = []
+            try:
+                for p, e, sp, pb in zip(prompts, encoder_inputs,
+                                        start_pos, prefix_blocks):
+                    out.append(self._prefill_dense(p, e, sp, pb))
+            except Exception:
+                for slot, _ in out:          # all-or-nothing, like paged
+                    self.kv.free_slot(slot)
+                raise
+            return out
+
+        slots: List[int] = []
+        try:
+            for p in prompts:
+                slots.append(self.kv.alloc_slot(len(p)))
+            for slot, sp, pb in zip(slots, start_pos, prefix_blocks):
+                if sp:
+                    self.kv.load_prefix_blocks_paged(slot, pb)
+
+            C, Bp = self.prefill_chunk, self.prefill_batch
+            suffix = [len(p) - sp for p, sp in zip(prompts, start_pos)]
+            last_logits: List[Optional[np.ndarray]] = [None] * n
+            # length-sorted packing: similar suffix lengths share waves,
+            # so late rounds run with every row still live instead of
+            # dragging one long prompt alongside q_len=0 padding rows
+            order = sorted(range(n), key=lambda i: -suffix[i])
+            for w0 in range(0, n, Bp):
+                wave = order[w0:w0 + Bp]
+                rounds = -(-max(suffix[i] for i in wave) // C)
+                tables = np.full((Bp, self.kv.blocks_per_slot),
+                                 self.kv.trash_block, np.int32)
+                for r, i in enumerate(wave):
+                    tables[r] = self.kv.table_row(slots[i])
+                tables = jnp.asarray(tables)
+                for c in range(rounds):
+                    toks = np.zeros((Bp, C), np.int32)
+                    starts = np.zeros(Bp, np.int32)
+                    qlens = np.zeros(Bp, np.int32)
+                    for r, i in enumerate(wave):
+                        ql = min(max(suffix[i] - c * C, 0), C)
+                        if ql == 0:
+                            continue         # exhausted: padding row
+                        s0 = start_pos[i] + c * C
+                        toks[r, :ql] = prompts[i][s0:s0 + ql]
+                        starts[r] = s0
+                        qlens[r] = ql
+                    logits, self.kv.cache = self._prefill_paged(
+                        self.params, jnp.asarray(toks), jnp.asarray(starts),
+                        jnp.asarray(qlens), self.kv.cache, tables)
+                    for r, i in enumerate(wave):
+                        li = (suffix[i] - 1) - c * C
+                        if 0 <= li < C:      # row's last real token here
+                            # device-resident slice: no host sync inside
+                            # the round loop, so waves keep dispatching
+                            last_logits[i] = logits[r, li]
+                # FLOPs proxy: every row of the compiled (Bp, C) program
+                # executes every round, dummy rows included
+                self.prefill_tokens_executed += rounds * C * Bp
+                self.prefill_tokens_padding += (rounds * C * Bp
+                                                - sum(suffix[i]
+                                                      for i in wave))
+        except Exception:
+            # all-or-nothing: an error anywhere (allocation, prefix
+            # load, a prefill round) releases every slot claimed, so
+            # nothing leaks past the caller's OutOfBlocks handling
+            for s in slots:
+                self.kv.free_slot(s)
+            raise
+        self.prefill_tokens += sum(suffix)
+        self.cached_prefix_tokens += sum(start_pos)
+        # one host-transfer pass AFTER every round dispatched
+        return [(slot, np.asarray(ll)) for slot, ll in
+                zip(slots, last_logits)]
+
+    def _prefill_dense(self, prompt: np.ndarray, encoder_input,
+                       start_pos: int, prefix_blocks: Sequence[int],
+                       ) -> Tuple[int, np.ndarray]:
+        """Dense (and enc-dec) prefill: batch-1 chunk replay through
+        ``decode_step`` into a transient stripe, then slot-scatter."""
         P = len(prompt)
-        assert 0 <= start_pos < P, (start_pos, P)
         slot = self.kv.alloc_slot(P)
+        try:
+            return self._prefill_dense_into(slot, prompt, encoder_input,
+                                            start_pos, prefix_blocks)
+        except Exception:
+            self.kv.free_slot(slot)          # nothing leaks on failure
+            raise
+
+    def _prefill_dense_into(self, slot: int, prompt: np.ndarray,
+                            encoder_input, start_pos: int,
+                            prefix_blocks: Sequence[int],
+                            ) -> Tuple[int, np.ndarray]:
+        P = len(prompt)
         enc1 = None
         if self.cfg.family == "encdec":
             enc1 = self._encode(self.params,
                                 jnp.asarray(encoder_input)[None])
             self._enc_pool = self._enc_pool.at[slot].set(enc1[0])
         cache1 = T.init_cache(self.cfg, 1, self.max_seq_len)
+        self.transient_prefill_bytes = max(
+            self.transient_prefill_bytes,
+            sum(leaf.nbytes for leaf in jax.tree.leaves(cache1)))
         if start_pos:
             cache1 = self.kv.load_prefix_blocks(cache1, prefix_blocks)
         C = self.prefill_chunk
@@ -226,15 +385,17 @@ class ServingEngine:
         self.kv.write_prefill(slot, cache1)
         self.prefill_tokens += n
         self.prefill_tokens_executed += n_chunks * C
+        self.prefill_tokens_padding += n_chunks * C - n
         self.cached_prefix_tokens += start_pos
         return slot, np.asarray(last_logits)
 
     def decode_once(self, tokens: np.ndarray,
-                    positions: np.ndarray) -> np.ndarray:
+                    positions: np.ndarray) -> jnp.ndarray:
         """One decode step over all slots.  ``tokens``/``positions`` are
         (max_slots,); rows for free slots carry dummies (their cache
         writes land in region the next prefill overwrites).  Returns
-        logits (max_slots, V)."""
+        logits (max_slots, V) **on device** — pass them straight to
+        ``sample_tokens`` so the step costs one host sync, not two."""
         batch = {"tokens": jnp.asarray(tokens, jnp.int32)[:, None],
                  "positions": jnp.asarray(positions, jnp.int32),
                  "cache": self.kv.cache}
@@ -246,7 +407,7 @@ class ServingEngine:
             batch["encoder_output"] = self._enc_pool
         logits, self.kv.cache = self._step(self.params, batch)
         self.decode_steps += 1
-        return np.asarray(logits[:, 0])
+        return logits[:, 0]                  # device-resident; no sync here
 
     def sample_tokens(self, logits: np.ndarray, temps: np.ndarray,
                       greedy: np.ndarray) -> np.ndarray:

@@ -152,8 +152,9 @@ class PagedKVCache:
     so every family (dense, MoE, VLM, SSM, hybrid, enc-dec) works
     unmodified.  Paged mode (``paged=True``): every leaf's batch axis
     indexes ``num_blocks + 1`` KV blocks and its sequence axis is one
-    block wide; ``write_prefill`` lands one pool block at a time,
-    ``device_block_tables()`` feeds the Pallas paged-attention gather,
+    block wide; prefill chunks and decode steps write straight into the
+    blocks through the tables (no staging cache),
+    ``device_block_tables()`` feeds the Pallas paged-attention gathers,
     and the ``num_blocks`` knob may undersize the pool below
     ``max_slots * blocks_per_slot`` (real ``OutOfBlocks``).
 
@@ -206,8 +207,6 @@ class PagedKVCache:
             self._tables = np.full((max_slots, self.blocks_per_slot),
                                    self.trash_block, np.int32)
             self._tables_dev = None
-            self._write_block = jax.jit(self._make_write_block(),
-                                        donate_argnums=0)
             self._save_paged = None       # built with the prefix store
         else:
             self.cache = T.init_cache(cfg, max_slots, max_seq_len)
@@ -364,25 +363,6 @@ class PagedKVCache:
 
         return copy
 
-    def _make_write_block(self):
-        """storage[bid] <- single(batch-1 cache)[0, pos0:pos0+bs] — the
-        paged half of ``write_prefill``: one block of a freshly prefilled
-        sequence lands in its pool block."""
-        baxes, saxes, bs = self._axes, self._seq_axes, self.block_size
-
-        def write_block(storage, single, bid, pos0):
-            leaves_st, treedef = jax.tree.flatten(storage)
-            leaves_s = jax.tree.leaves(single)
-            out = []
-            for lst, ls, bax, sax in zip(leaves_st, leaves_s, baxes, saxes):
-                piece = jax.lax.dynamic_slice_in_dim(ls, pos0, bs, axis=sax)
-                starts = [jnp.int32(0)] * lst.ndim
-                starts[bax] = bid
-                out.append(jax.lax.dynamic_update_slice(lst, piece, starts))
-            return jax.tree.unflatten(treedef, out)
-
-        return write_block
-
     def _make_save_paged(self):
         """prefix_store[dst] <- block_storage[src] — in paged mode a
         prefix snapshot is a straight block-to-block copy (both trees
@@ -436,6 +416,30 @@ class PagedKVCache:
             cache1 = self._load(cache1, self.prefix_store, jnp.int32(bid),
                                 jnp.int32(k))
         return cache1
+
+    def load_prefix_blocks_paged(self, slot: int,
+                                 blocks: Sequence[int]) -> None:
+        """Paged resume path: copy stored prefix blocks straight into
+        ``slot``'s pool blocks (block k of the list covers positions
+        ``[k*bs, (k+1)*bs)``), with no batch-1 staging cache in between.
+        The slot must already back those positions (``alloc_slot`` with
+        the full prompt length does)."""
+        assert self.paged, "block-to-block prefix load needs paged mode"
+        assert self.prefix_pool is not None, "prefix store not enabled"
+        table = self.block_table[slot]
+        assert len(blocks) <= len(table), (len(blocks), len(table))
+        for k, bid in enumerate(blocks):
+            # same block-to-block copy program as the save direction,
+            # with the trees swapped: cache[table[k]] <- prefix_store[bid]
+            self.cache = self._save_paged(
+                self.cache, self.prefix_store, jnp.int32(bid),
+                jnp.int32(table[k]))
+
+    def table_row(self, slot: int) -> np.ndarray:
+        """The slot's padded block-table row (unbacked entries name the
+        trash block) — what a batched-prefill program row gathers through."""
+        assert self.paged, "block tables are device-resident in paged mode"
+        return self._tables[slot]
 
     def fork_prefix_block(self, src: int) -> int:
         """Copy-on-write: a private copy of a shared prefix block, so a
@@ -516,16 +520,12 @@ class PagedKVCache:
         return self._tables_dev
 
     def write_prefill(self, slot: int, single_cache) -> None:
-        """Scatter a batch-1 prefilled cache into ``slot``'s storage: the
-        whole stripe in dense mode, one pool block at a time in paged
-        mode (only the blocks the slot's table actually maps)."""
-        if self.paged:
-            bs = self.block_size
-            for k, bid in enumerate(self.block_table[slot]):
-                self.cache = self._write_block(
-                    self.cache, single_cache, jnp.int32(bid),
-                    jnp.int32(k * bs))
-            return
+        """Scatter a batch-1 prefilled cache into ``slot``'s stripe of
+        the dense storage.  Paged prefill never stages a batch-1 cache —
+        chunks land straight in pool blocks (see ``T.prefill_step``)."""
+        assert not self.paged, (
+            "paged prefill writes chunks straight into pool blocks; "
+            "there is no batch-1 cache to scatter")
         self.cache = self._write(self.cache, single_cache,
                                  jnp.asarray(slot, jnp.int32))
 

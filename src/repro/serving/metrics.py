@@ -47,6 +47,12 @@ class ServingMetrics:
         self.cached_tokens_served: int = 0
         self.prompt_tokens: int = 0
         self.prefix_evictions: int = 0
+        # prefill work split: real prompt tokens vs what the compiled
+        # chunk programs executed (chunk + batch-row padding included),
+        # so co-admission padding overhead is visible, not silently
+        # folded into the FLOPs proxy
+        self.prefill_tokens_real: int = 0
+        self.prefill_tokens_executed: int = 0
 
     # -- recording -----------------------------------------------------------
 
@@ -70,6 +76,13 @@ class ServingMetrics:
             self.prefix_misses += 1
         self.cached_tokens_served += cached_tokens
         self.prompt_tokens += prompt_tokens
+
+    def record_prefill_work(self, real: int, executed: int) -> None:
+        """One admission batch's prefill accounting: ``real`` prompt
+        tokens computed vs ``executed`` token positions the compiled
+        programs ran (the difference is padding)."""
+        self.prefill_tokens_real += real
+        self.prefill_tokens_executed += executed
 
     def sample_gauges(self, queue_depth: int, active: int,
                       max_slots: int) -> None:
@@ -116,6 +129,15 @@ class ServingMetrics:
                             "peak": max(self.queue_depth, default=0)},
             "slot_occupancy": occ,
             "finish_reasons": reasons,
+            "prefill_tokens": {
+                "real": self.prefill_tokens_real,
+                "executed": self.prefill_tokens_executed,
+                "padding": (self.prefill_tokens_executed
+                            - self.prefill_tokens_real),
+                "padding_fraction": (
+                    (self.prefill_tokens_executed - self.prefill_tokens_real)
+                    / max(self.prefill_tokens_executed, 1)),
+            },
             "prefix_cache": {
                 "hits": self.prefix_hits,
                 "misses": self.prefix_misses,
@@ -149,7 +171,15 @@ def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
     misses = sum(p["misses"] for p in pc)
     cached = sum(p["cached_tokens_served"] for p in pc)
     prompt = sum(p["prompt_tokens"] for p in pc)
+    pf = [s["prefill_tokens"] for s in summaries if "prefill_tokens" in s]
+    pf_real = sum(p["real"] for p in pf)
+    pf_exec = sum(p["executed"] for p in pf)
     return {
+        "prefill_tokens": {
+            "real": pf_real, "executed": pf_exec,
+            "padding": pf_exec - pf_real,
+            "padding_fraction": (pf_exec - pf_real) / max(pf_exec, 1),
+        },
         "prefix_cache": {
             "hits": hits, "misses": misses,
             "hit_rate": hits / max(hits + misses, 1),

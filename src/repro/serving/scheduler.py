@@ -4,11 +4,15 @@ One scheduler drives one :class:`~repro.serving.engine.ServingEngine`
 (conceptually: the serving process inside one ``ch-run`` capsule).  The
 loop is the standard continuous-batching shape:
 
-    admit:  while a slot is free and the queue is non-empty, probe the
-            prefix cache for the longest cached prefix of the next
-            request, prefill only the uncached suffix into the freed
-            slot, and sample its first token from the prefill logits
-            (TTFT = one *suffix* prefill on a cache hit);
+    admit:  drain the queue into free slots in *batches*: as many
+            queued prompts as slots, KV blocks, and the engine's
+            ``prefill_batch`` allow are co-prefilled through ONE
+            compiled chunked program per round
+            (``engine.prefill_into_slots``); each request's prefix-cache
+            probe still runs first so only uncached suffixes execute,
+            and all first tokens of a batch are sampled in one
+            vectorized call (TTFT = one shared batched prefill instead
+            of a serial train of them);
     decode: one ``decode_once`` over the pooled cache advances *every*
             live sequence by one token, each sampled with its own
             ``SamplingParams``;
@@ -21,7 +25,12 @@ Prefix-cache interplay: the matched blocks are pinned (refcounted) for
 the request's lifetime so LRU eviction can never reclaim KV a live
 sequence was served from, and every admitted prompt is inserted back
 into the radix tree right after its prefill, making its KV available to
-the next request that shares it.
+the next request that shares it.  Co-admission respects this: a queued
+request sharing at least one full KV block of prefix with a request
+already collected into the current batch is deferred one round, so it
+admits *after* the insert and HITs the shared prefix instead of
+recomputing it in parallel — shared-prefix bursts serialize (each later
+request then skips the shared compute), unrelated prompts batch.
 
 With a paged engine the KV pool can be sized below worst case, so
 ``OutOfBlocks`` is a real event on both sides of the loop and neither
@@ -62,6 +71,7 @@ class _ReqState:
     request: Request
     slot: int = -1
     pos: int = 0                       # next cache write position
+    admit_seq: int = -1                # admission-recency (victim pick)
     emitted: List[int] = field(default_factory=list)
     finish_reason: str = ""
     cached_len: int = 0                # tokens served from the prefix cache
@@ -73,9 +83,14 @@ class Scheduler:
 
     def __init__(self, engine: ServingEngine,
                  metrics: Optional[ServingMetrics] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 max_admissions_per_step: Optional[int] = None):
         self.engine = engine
         self.max_slots = engine.max_slots
+        # cap on requests admitted per scheduler step (None = drain all
+        # that fit).  1 reproduces the old one-at-a-time admission — the
+        # benchmark baseline — and smooths decode latency under bursts.
+        self.max_admissions_per_step = max_admissions_per_step
         self.metrics = metrics or ServingMetrics(clock=clock)
         self.queue: deque = deque()
         self.active: Dict[int, _ReqState] = {}          # slot -> state
@@ -84,6 +99,7 @@ class Scheduler:
         self.preemptions = 0               # decode-time OutOfBlocks defers
         self.admission_stalls = 0          # admit-time OutOfBlocks retries
         self._next_rid = 0
+        self._admit_counter = 0            # monotonic admission stamp
         # eviction counting is per-scheduler; the cache outlives us
         pc = engine.prefix_cache
         self._evict_base = pc.stats.evicted_blocks if pc else 0
@@ -139,10 +155,27 @@ class Scheduler:
 
     # -- the loop ------------------------------------------------------------
 
-    def _admit(self) -> None:
-        while self.queue and self.engine.kv.free_slot_count > 0:
-            st = self.queue[0]                      # peek: pop only once
-            req = st.request                        # the slot is secured
+    def _shares_block(self, a: np.ndarray, b: np.ndarray) -> bool:
+        """True when two prompts share at least one full KV block of
+        common prefix — i.e. co-admitting them would recompute KV the
+        prefix cache could have shared."""
+        n = min(len(a), len(b), self.engine.kv.block_size)
+        return (n == self.engine.kv.block_size
+                and bool(np.array_equal(a[:n], b[:n])))
+
+    def _collect_batch(self, limit: int):
+        """Pop as many admissible head-of-queue requests as slots, KV
+        blocks, and ``limit`` allow.  Prefix pins are taken here; the
+        caller must release them if the prefill never happens.  Returns
+        ``(states, seqs, starts, blocks_lists)`` in queue order."""
+        kv = self.engine.kv
+        pc = self.prefix_cache
+        states, seqs, starts, blocks_lists = [], [], [], []
+        blocks_needed = 0
+        while (self.queue and len(states) < limit
+               and len(states) < kv.free_slot_count):
+            st = self.queue[0]
+            req = st.request
             if req.params.max_new_tokens <= 0:      # nothing to generate
                 self.queue.popleft()
                 st.finish_reason = "length"
@@ -155,49 +188,109 @@ class Scheduler:
             seq = (req.prompt if not resumed else
                    np.concatenate([np.asarray(req.prompt, np.int32),
                                    np.asarray(st.emitted[:-1], np.int32)]))
-            kv = self.engine.kv
-            if kv.pool.available < kv._blocks_for(len(seq)):
-                # KV pool dry: stall BEFORE touching the prefix cache so
-                # a request parked at the head doesn't re-count lookup
-                # stats (or churn pins) once per retry; a retirement
-                # must return blocks before this can succeed
-                self.admission_stalls += 1
+            if kv.pool.available < blocks_needed + kv._blocks_for(len(seq)):
+                # KV pool dry for THIS request: stop collecting BEFORE
+                # touching the prefix cache so a request parked at the
+                # head doesn't re-count lookup stats (or churn pins)
+                # once per retry; stall only if nothing at all fit
+                if not states:
+                    self.admission_stalls += 1
                 break
-            pc = self.prefix_cache
+            if pc is not None and any(
+                    self._shares_block(seq, s) for s in seqs):
+                # the candidate shares >= one KV block of prefix with a
+                # request already in this batch: defer it one round so
+                # it can HIT the prefix the earlier request is about to
+                # insert instead of recomputing it in parallel —
+                # shared-prefix bursts serialize, unrelated prompts batch
+                break
             cached_len, blocks = (0, [])
             if pc is not None:
                 cached_len, blocks = pc.lookup(seq)
-            try:
-                st.slot, last_logits = self.engine.prefill_into_slot(
-                    seq, req.encoder_input,
-                    start_pos=cached_len, prefix_blocks=blocks)
-            except OutOfBlocks:
-                # unreachable given the pre-check, but never lose the
-                # request or its pins if it ever fires
-                if pc is not None and blocks:
-                    pc.release(blocks)
-                self.admission_stalls += 1
-                break
             self.queue.popleft()
             st.cached_len, st.prefix_blocks = cached_len, blocks
-            if pc is not None:
-                pc.insert(seq, st.slot)
-                if not resumed:            # one prefix outcome per request
-                    self.metrics.record_prefix(cached_len, len(seq))
-                self.metrics.prefix_evictions = (pc.stats.evicted_blocks
-                                                 - self._evict_base)
-            st.pos = len(seq)
-            if resumed:                             # last token still pending
-                self.active[st.slot] = st
-                continue
-            tok = int(self.engine.sample_tokens(
-                last_logits[None],
-                np.asarray([req.params.temperature], np.float32),
-                np.asarray([req.params.greedy]))[0])
-            st.emitted.append(tok)
-            self.metrics.record_first_token(st.rid)
-            if not self._maybe_retire(st, tok):
-                self.active[st.slot] = st
+            states.append(st)
+            seqs.append(seq)
+            starts.append(cached_len)
+            blocks_lists.append(blocks)
+            blocks_needed += kv._blocks_for(len(seq))
+        return states, seqs, starts, blocks_lists
+
+    def _admit(self) -> int:
+        """Batched admission; returns how many requests were admitted
+        (the step loop uses this to tell a capped-but-progressing round
+        from a genuine admission deadlock)."""
+        admitted = 0
+        pc = self.prefix_cache
+        while self.queue and self.engine.kv.free_slot_count > 0:
+            limit = self.engine.prefill_batch
+            if self.max_admissions_per_step is not None:
+                limit = min(limit, self.max_admissions_per_step - admitted)
+            if limit <= 0:
+                return admitted
+            states, seqs, starts, blocks_lists = self._collect_batch(limit)
+            if not states:
+                return admitted
+            real0 = self.engine.prefill_tokens
+            exec0 = self.engine.prefill_tokens_executed
+            try:
+                results = self.engine.prefill_into_slots(
+                    seqs, [st.request.encoder_input for st in states],
+                    start_pos=starts, prefix_blocks=blocks_lists)
+            except Exception as e:
+                # never lose a request or its pins: the engine released
+                # every slot (all-or-nothing), so requeue the whole
+                # batch at the head, in order.  OutOfBlocks (unreachable
+                # given the pre-check) stalls; anything else — device
+                # OOM, an engine assert — propagates with the scheduler
+                # state intact, so the caller can retry or drain.
+                for st, blocks in zip(reversed(states),
+                                      reversed(blocks_lists)):
+                    if pc is not None and blocks:
+                        pc.release(blocks)
+                    st.prefix_blocks = []
+                    self.queue.appendleft(st)
+                if not isinstance(e, OutOfBlocks):
+                    raise
+                self.admission_stalls += 1
+                return admitted
+            admitted += len(states)
+            fresh: List[_ReqState] = []
+            fresh_logits: List[np.ndarray] = []
+            for st, seq, (slot, last_logits) in zip(states, seqs, results):
+                resumed = bool(st.emitted)
+                st.slot = slot
+                st.admit_seq = self._admit_counter
+                self._admit_counter += 1
+                if pc is not None:
+                    pc.insert(seq, st.slot)
+                    if not resumed:        # one prefix outcome per request
+                        self.metrics.record_prefix(st.cached_len, len(seq))
+                    self.metrics.prefix_evictions = (pc.stats.evicted_blocks
+                                                     - self._evict_base)
+                st.pos = len(seq)
+                if resumed:                         # last token still pending
+                    self.active[st.slot] = st
+                else:
+                    fresh.append(st)
+                    fresh_logits.append(np.asarray(last_logits))
+            if fresh:
+                # every first token of the batch in one vectorized sample
+                toks = self.engine.sample_tokens(
+                    np.stack(fresh_logits),
+                    np.asarray([st.request.params.temperature
+                                for st in fresh], np.float32),
+                    np.asarray([st.request.params.greedy for st in fresh]))
+                for st, tok in zip(fresh, toks):
+                    tok = int(tok)
+                    st.emitted.append(tok)
+                    self.metrics.record_first_token(st.rid)
+                    if not self._maybe_retire(st, tok):
+                        self.active[st.slot] = st
+            self.metrics.record_prefill_work(
+                self.engine.prefill_tokens - real0,
+                self.engine.prefill_tokens_executed - exec0)
+        return admitted
 
     def _preempt(self, st: _ReqState) -> None:
         """Defer a live request: free its slot and KV blocks, release its
@@ -214,11 +307,14 @@ class Scheduler:
         self.preemptions += 1
 
     def _pick_victim(self, exclude_slot: int) -> Optional[_ReqState]:
-        """Most recently admitted live request other than the one trying
-        to grow — freeing the youngest wastes the least finished work."""
+        """Most recently *admitted* live request other than the one
+        trying to grow — freeing the youngest admission wastes the least
+        finished work.  (Admission recency, not rid: a resumed old
+        request is younger than a long-running new one.)"""
         candidates = [st for slot, st in self.active.items()
                       if slot != exclude_slot]
-        return max(candidates, key=lambda st: st.rid) if candidates else None
+        return (max(candidates, key=lambda st: st.admit_seq)
+                if candidates else None)
 
     def _maybe_retire(self, st: _ReqState, tok: int) -> bool:
         sp = st.request.params
@@ -261,16 +357,18 @@ class Scheduler:
     def step(self) -> bool:
         """Admit into free slots, then decode one token for every live
         sequence.  Returns False when there was nothing to do."""
-        self._admit()
+        admitted = self._admit()
         if not self.active:
-            if self.queue:
+            if self.queue and not admitted:
                 # nothing live, nothing admitted: with the pool idle this
                 # is unservable demand, not a transient — fail loudly
                 # instead of spinning forever
                 raise RuntimeError(
                     "admission deadlock: queue non-empty, no active "
                     "sequences, and prefill still cannot get blocks")
-            return False
+            # everything admitted this step retired at its first token
+            # (or the admission cap paused the queue): not a deadlock
+            return bool(self.queue) or admitted > 0
         self._grow_or_preempt()
         if not self.active:
             return bool(self.queue)        # everything deferred; retry
