@@ -1,0 +1,209 @@
+"""Interleaved prefill/decode benchmark: token-budgeted rounds vs
+wave-at-once admission under bursts.
+
+The claim the SplitFuse-style scheduler exists to prove: when an
+8-deep admission burst of long prompts lands on a replica with running
+sequences, bounding each scheduler step to ``prefill_token_budget``
+executed prefill tokens (fused with one decode round) keeps the
+running sequences' inter-token latency flat — the whole burst no
+longer runs every chunked-prefill round between two decode steps — at
+the same completed throughput, with greedy outputs bit-identical.
+
+Three runs over the same request stream (2 long-running decodes + 3
+bursts of 8 long prompts arriving at fixed step offsets), written to
+``BENCH_interleaved.json``:
+
+* **dense**       — dense-layout engine, wave-at-once (oracle);
+* **wave**        — paged engine, unbudgeted admission (the PR 4
+  shape: a burst's full prefill runs between two decode steps);
+* **interleaved** — same paged engine config, ``prefill_token_budget``
+  = one compiled ``(Bp, C)`` round per step;
+* assertions      — p95 inter-token gap of interleaved <= 1/2 of
+  wave-at-once (median over reps), identical completed-request counts
+  and total tokens, wall clock within 1.5x, and greedy outputs
+  bit-identical dense/wave/interleaved.
+
+  PYTHONPATH=src python -m benchmarks.interleaved_prefill          # smoke
+  PYTHONPATH=src python -m benchmarks.interleaved_prefill --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+N_LONG = 2
+BURST_DEPTH = 8
+BURST_STEPS = (4, 14, 26)
+MAX_NEW_LONG = 40
+MAX_NEW_BURST = 2
+
+
+def _workload(cfg):
+    import numpy as np
+    rng = np.random.default_rng(0)
+    longs = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+             for _ in range(N_LONG)]
+    bursts = [[rng.integers(0, cfg.vocab_size, 48, dtype=np.int32)
+               for _ in range(BURST_DEPTH)]
+              for _ in range(len(BURST_STEPS))]
+    return longs, bursts
+
+
+def _serve(engine, cfg, budget):
+    """Drive one run: long-runners first, then each 8-deep burst lands
+    at its step offset mid-decode.  Returns (outputs in submission
+    order, metrics summary, wall seconds)."""
+    from repro.serving import Request, SamplingParams, Scheduler
+    longs, bursts = _workload(cfg)
+    sched = Scheduler(engine, prefill_token_budget=budget)
+    rids = [sched.submit(Request(p, SamplingParams(
+        max_new_tokens=MAX_NEW_LONG, greedy=True))) for p in longs]
+    pending = list(zip(BURST_STEPS, bursts))
+    steps = 0
+    t0 = time.perf_counter()
+    while sched.has_work or pending:
+        if pending and steps >= pending[0][0]:
+            burst = pending.pop(0)[1]
+            rids += [sched.submit(Request(p, SamplingParams(
+                max_new_tokens=MAX_NEW_BURST, greedy=True)))
+                for p in burst]
+        sched.step()
+        steps += 1
+    wall = time.perf_counter() - t0
+    return [sched.output(r) for r in rids], sched.metrics.summary(), wall
+
+
+def _warmup(engine, cfg):
+    """Compile the (Bp, C) prefill round, the decode step, and the
+    samplers outside the timed windows."""
+    import numpy as np
+    from repro.serving import Request, SamplingParams, Scheduler
+    rng = np.random.default_rng(1)
+    sched = Scheduler(engine, prefill_token_budget=None)
+    sched.submit(Request(rng.integers(0, cfg.vocab_size, 48, dtype=np.int32),
+                         SamplingParams(max_new_tokens=4, greedy=True)))
+    sched.run()
+
+
+def run(quick: bool = True, out_path: str = "BENCH_interleaved.json"):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving import ServingEngine
+
+    arch = "qwen2-0.5b"
+    # chunk 8: the interleaved per-step prefill quantum is one (4, 8)
+    # round, while a whole 8-deep burst of 48-token prompts costs 12
+    # such rounds — the wave-at-once stall the budget removes
+    block, max_seq_len, slots, prefill_batch, chunk = 16, 64, 12, 4, 8
+    budget = prefill_batch * chunk       # one compiled round per step
+    reps = 3 if quick else 5             # median de-flakes the ratio
+
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    num_blocks = slots * (max_seq_len // block)
+
+    def engine(**kw):
+        return ServingEngine(cfg, params, max_seq_len=max_seq_len,
+                             max_slots=slots, kv_block_size=block,
+                             prefill_chunk=chunk,
+                             prefill_batch=prefill_batch, **kw)
+
+    dense_out, dense_sum, _ = _serve(engine(), cfg, None)
+
+    wave_eng = engine(paged=True, num_blocks=num_blocks)
+    inter_eng = engine(paged=True, num_blocks=num_blocks)
+    _warmup(wave_eng, cfg)
+    _warmup(inter_eng, cfg)
+
+    _serve(wave_eng, cfg, None)          # discarded warm rep: the first
+    _serve(inter_eng, cfg, budget)       # pass pays allocator/dispatch cost
+
+    ratios, wave_runs, inter_runs = [], [], []
+    for _rep in range(reps):
+        wave_out, wave_sum, wave_wall = _serve(wave_eng, cfg, None)
+        inter_out, inter_sum, inter_wall = _serve(inter_eng, cfg, budget)
+        ratios.append(wave_sum["decode_gap_ms"]["p95"]
+                      / inter_sum["decode_gap_ms"]["p95"])
+        wave_runs.append((wave_sum, wave_wall))
+        inter_runs.append((inter_sum, inter_wall))
+
+    n_req = N_LONG + BURST_DEPTH * len(BURST_STEPS)
+    for a, b, c in zip(dense_out, wave_out, inter_out):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    assert (dense_sum["requests_completed"]
+            == wave_sum["requests_completed"]
+            == inter_sum["requests_completed"] == n_req)
+    assert (wave_sum["total_new_tokens"]
+            == inter_sum["total_new_tokens"])       # equal throughput...
+    wave_wall = sorted(w for _, w in wave_runs)[reps // 2]
+    inter_wall = sorted(w for _, w in inter_runs)[reps // 2]
+    assert inter_wall <= 1.5 * wave_wall, (
+        f"interleaving cost wall clock: {inter_wall:.3f}s vs "
+        f"{wave_wall:.3f}s wave-at-once — no longer 'equal throughput'")
+    jitter_drop = sorted(ratios)[len(ratios) // 2]
+    assert jitter_drop >= 2.0, (
+        f"interleaved p95 inter-token gap only {jitter_drop:.2f}x lower "
+        f"(median of {[f'{r:.2f}' for r in ratios]}) than wave-at-once "
+        f"under an {BURST_DEPTH}-deep burst — the SplitFuse win regressed")
+
+    def mode_record(summary, wall):
+        return {
+            "decode_gap_ms": summary["decode_gap_ms"],
+            "ttft_ms": summary["ttft_ms"],
+            "wall_s": wall,
+            "tokens_per_s": summary["tokens_per_s"],
+            "requests_completed": summary["requests_completed"],
+            "decode_steps": summary["decode_steps"],
+            "prefill_budget": summary["prefill_budget"],
+        }
+
+    record = {
+        "arch": arch, "quick": quick, "n_requests": n_req,
+        "burst_depth": BURST_DEPTH, "bursts": len(BURST_STEPS),
+        "block_size": block, "max_seq_len": max_seq_len,
+        "max_slots": slots, "num_blocks": num_blocks,
+        "prefill_batch": prefill_batch, "prefill_chunk": chunk,
+        "prefill_token_budget": budget,
+        "dense": mode_record(dense_sum, 0.0),
+        "wave_at_once": mode_record(wave_sum, wave_wall),
+        "interleaved": mode_record(inter_sum, inter_wall),
+        "p95_gap_drop": jitter_drop,
+        "bit_identical_outputs": True,
+    }
+    record["dense"].pop("wall_s")                   # untimed oracle run
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True, default=str)
+
+    wg, ig = wave_sum["decode_gap_ms"], inter_sum["decode_gap_ms"]
+    rows = [
+        ("interleaved_prefill/wave_at_once", wave_wall * 1e6,
+         f"unbudgeted admission: p95 inter-token gap {wg['p95']:.2f} ms "
+         f"(max {wg['max']:.2f} ms) under {BURST_DEPTH}-deep bursts"),
+        ("interleaved_prefill/interleaved", inter_wall * 1e6,
+         f"budget {budget} tok/step: p95 gap {ig['p95']:.2f} ms "
+         f"({jitter_drop:.1f}x lower, max {ig['max']:.2f} ms), "
+         f"budget utilization "
+         f"{inter_sum['prefill_budget']['utilization']:.2f}, "
+         f"bit-identical, results -> {out_path}"),
+    ]
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_interleaved.json")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, out_path=args.out)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

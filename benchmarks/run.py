@@ -127,7 +127,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", help="comma list: scaling,overhead,ps,physics,"
                                    "roofline,kernels,serving,prefix_cache,"
-                                   "paged_attention,batched_prefill")
+                                   "paged_attention,batched_prefill,"
+                                   "interleaved")
     ap.add_argument("--check", action="store_true",
                     help="after running, validate every BENCH_*.json in "
                          "the cwd (bit_identical_outputs true where "
@@ -196,6 +197,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append(("batched_prefill/FAILED", 0.0, "see stderr"))
+    if want("interleaved"):
+        from benchmarks import interleaved_prefill
+        try:
+            rows += interleaved_prefill.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("interleaved_prefill/FAILED", 0.0, "see stderr"))
     if want("physics"):
         from benchmarks import physics_validation
         try:

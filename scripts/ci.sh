@@ -4,11 +4,14 @@
 # bit-identity assertion inside it), the paged-attention benchmark
 # (paged > dense concurrency at equal KV bytes, undersized-pool run with
 # no drops / no leaked pins, greedy bit-identity — each is asserted), and
-# the batched-prefill benchmark via `benchmarks.run --check`, which also
-# validates every emitted BENCH_*.json artifact (bit_identical_outputs
-# true where present, nonzero completed requests) so a silently-broken
-# benchmark fails the build.
+# the batched-prefill and interleaved-prefill benchmarks via
+# `benchmarks.run --check`, which also validates every emitted
+# BENCH_*.json artifact (bit_identical_outputs true where present,
+# nonzero completed requests) so a silently-broken benchmark fails the
+# build.
 # Usage: scripts/ci.sh [extra pytest args]
+# CI runs the full suite (including the slow-marked interleaved
+# scheduler stress sweep); pass `-m "not slow"` for the quick tier.
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
@@ -17,4 +20,4 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.prefix_cache
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.paged_attention
 # --check exits nonzero on a FAILED row or an unhealthy BENCH_*.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
-    --only batched_prefill --check
+    --only batched_prefill,interleaved --check

@@ -44,6 +44,11 @@ def main(argv=None):
     ap.add_argument("--prefill-batch", type=int, default=4,
                     help="max co-admitted prompts per scheduler round "
                          "(batched multi-slot prefill; 1 = one-at-a-time)")
+    ap.add_argument("--prefill-token-budget", type=int, default=None,
+                    help="max executed prefill token positions per "
+                         "scheduler step (SplitFuse-style interleaving: "
+                         "bounds decode latency jitter under admission "
+                         "bursts; default: unbudgeted wave-at-once)")
     ap.add_argument("--prefix-cache-blocks", type=int, default=64,
                     help="per-replica prefix-store KV blocks (0 disables)")
     ap.add_argument("--shared-prefix", type=int, default=0,
@@ -68,12 +73,14 @@ def main(argv=None):
                              paged=args.paged, num_blocks=args.num_blocks,
                              prefill_batch=args.prefill_batch)
                for r in range(args.replicas)]
-    gateway = ReplicaGateway.from_engines(engines)
+    gateway = ReplicaGateway.from_engines(
+        engines, prefill_token_budget=args.prefill_token_budget)
     print(f"run config: arch={cfg.name} replicas={args.replicas} "
           f"max_slots={args.max_slots} max_seq_len={args.max_seq_len} "
           f"paged={args.paged} num_blocks={args.num_blocks} "
           f"prefill_batch={engines[0].prefill_batch} "
           f"prefill_chunk={engines[0].prefill_chunk} "
+          f"prefill_token_budget={args.prefill_token_budget} "
           f"prefix_cache_blocks={args.prefix_cache_blocks}")
 
     rng = np.random.default_rng(0)
@@ -101,6 +108,11 @@ def main(argv=None):
           f"ttft p95 {tot['ttft_ms_p95']:.1f} ms, "
           f"latency p95 {tot['latency_ms_p95']:.1f} ms, "
           f"slot occupancy {tot['slot_occupancy']:.2f}")
+    dg = tot.get("decode_gap_ms", {})
+    if dg.get("count"):
+        print(f"decode jitter: inter-token gap p50 {dg['p50']:.2f} ms, "
+              f"p95 {dg['p95']:.2f} ms, max {dg['max']:.2f} ms "
+              f"over {dg['count']} gaps")
     pc = tot.get("prefix_cache", {})
     if pc.get("hits", 0) or pc.get("misses", 0):
         print(f"prefix cache: hit rate {pc['hit_rate']:.2f}, "

@@ -1,5 +1,5 @@
-from repro.serving.engine import (Request, SamplingParams, ServingEngine,
-                                  make_serve_step)
+from repro.serving.engine import (PrefillCursor, Request, SamplingParams,
+                                  ServingEngine, make_serve_step)
 from repro.serving.gateway import (CapsuleReplica, ReplicaGateway,
                                    launch_capsule_replicas)
 from repro.serving.kvcache import KVBlockPool, OutOfBlocks, PagedKVCache

@@ -18,8 +18,23 @@ pooled decode cache (a :class:`~repro.serving.kvcache.PagedKVCache` over
   each row's last *real* token's logits are extracted for the first
   sample.  Dense mode serves the same interface through the original
   batch-1 ``lax.scan`` chunk replay (the correctness oracle).
+* ``begin_prefill`` / ``advance_prefill`` / ``cancel_prefill`` — the
+  *resumable* form of the same work, the substrate of SplitFuse-style
+  prefill/decode interleaving.  ``begin_prefill`` claims slots (and
+  prefix blocks) and registers one :class:`PrefillCursor` per prompt on
+  the engine; ``advance_prefill`` runs chunk rounds against the
+  in-flight cursors under a *token budget* (executed token positions,
+  the FLOPs proxy) and returns the cursors that completed, each with
+  its last real token's logits; cursors that did not finish stay parked
+  on the engine — their prefill state (position cursor, and in dense
+  mode the staging cache) persists **between scheduler steps**, so a
+  decode step for every running sequence can run in between.
+  ``cancel_prefill`` abandons a partially-prefilled slot (preemption).
 * ``prefill_into_slot`` — single-prompt compatibility wrapper.
 * ``decode_once`` — one token for every slot against the pooled cache;
+  while cursors are in flight their slots' block-table rows are masked
+  to the trash block, so the dummy decode rows of mid-prefill slots can
+  never corrupt the KV the prefill already wrote;
   ``serve_step`` here is the exact program the decode dry-run shapes
   lower.  Logits stay **on device**; the host transfer is deferred to
   ``sample_tokens`` so each decode step costs one sync, not two.
@@ -42,7 +57,7 @@ guarantee.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +82,43 @@ class Request:
     # enc-dec (whisper): precomputed frame embeddings (enc_seq, d_model);
     # the engine runs the encoder once at prefill
     encoder_input: Optional[np.ndarray] = None
+
+
+@dataclass
+class PrefillCursor:
+    """Progress of one in-flight (resumable) prefill.
+
+    ``tokens`` is the full target sequence, ``start_pos`` the
+    prefix-cache resume offset, and ``pos`` the next position to
+    execute: ``start_pos <= pos <= len(tokens)``.  ``seq`` is the
+    begin-order stamp advance rounds are scheduled by (FIFO — no
+    admission can be starved by a stream of later, shorter ones).
+    ``last_logits`` is set (device-resident) once the row's last real
+    token has run.  In dense mode ``dense_cache`` carries the batch-1
+    staging cache across ``advance_prefill`` calls — the state that
+    makes mid-prompt suspension possible; it materializes lazily at the
+    cursor's first chunk (so co-admitted prompts waiting their turn
+    hold no stripe) and ``prefix_blocks`` keeps the pinned block ids
+    until then.  Paged mode needs neither: chunks land straight in pool
+    blocks, which persist by construction."""
+    slot: int
+    tokens: np.ndarray
+    start_pos: int
+    pos: int
+    seq: int = 0
+    encoder_input: Optional[np.ndarray] = None
+    prefix_blocks: Tuple[int, ...] = ()
+    dense_cache: object = None
+    enc1: object = None
+    last_logits: object = None
+
+    @property
+    def remaining(self) -> int:
+        return len(self.tokens) - self.pos
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= len(self.tokens)
 
 
 def make_serve_step(cfg, *, long_context: bool = False):
@@ -129,6 +181,8 @@ class ServingEngine:
         self.prefill_tokens_padding = 0      # executed - real
         self.cached_prefix_tokens = 0        # tokens served from the store
         self.transient_prefill_bytes = 0     # peak batch-1 staging cache
+        self._inflight: Dict[int, PrefillCursor] = {}   # slot -> cursor
+        self._begin_seq = 0                  # FIFO stamp for cursors
         self._step = jax.jit(make_serve_step(cfg))
 
         if paged:
@@ -238,21 +292,38 @@ class ServingEngine:
                            *, start_pos: Optional[Sequence[int]] = None,
                            prefix_blocks: Optional[Sequence] = None,
                            ) -> List[Tuple[int, np.ndarray]]:
-        """Co-prefill a batch of prompts into free slots.
+        """Co-prefill a batch of prompts into free slots, to completion.
 
-        Paged mode runs all of them through ONE compiled chunked program
-        per round: prompts are length-sorted into waves of at most
-        ``prefill_batch`` rows, each round executes a fixed ``(Bp, C)``
-        chunk whose K/V lands straight in the slots' pool blocks (no
-        dense stripe), and rows whose suffix is exhausted ride along as
-        ``q_len = 0`` padding.  Slot allocation is all-or-nothing: on
-        ``OutOfBlocks`` every slot claimed so far is released before the
-        error propagates.  Dense mode (and enc-dec) prefills serially
-        through the batch-1 scan path — identical math, so greedy
-        outputs are bit-identical across the two layouts.
+        One ``begin_prefill`` + one unbudgeted ``advance_prefill``: the
+        wave-at-once shape.  Paged mode packs every round as ONE
+        compiled ``(Bp, C)`` chunk program whose K/V lands straight in
+        the slots' pool blocks; dense mode (and enc-dec) replays
+        batch-1 chunks — identical math, so greedy outputs are
+        bit-identical across the two layouts.  All-or-nothing: an error
+        anywhere (allocation, prefix load, a prefill round) releases
+        every slot the call claimed before it propagates.
 
         Returns ``[(slot, last_logits (V,))]`` in **input order**.
         """
+        cursors = self.begin_prefill(prompts, encoder_inputs,
+                                     start_pos=start_pos,
+                                     prefix_blocks=prefix_blocks)
+        self.advance_prefill(cursors)        # cleans up all slots on error
+        # one host-transfer pass AFTER every round dispatched
+        return [(c.slot, np.asarray(c.last_logits)) for c in cursors]
+
+    def begin_prefill(self, prompts: Sequence[np.ndarray],
+                      encoder_inputs: Optional[Sequence] = None,
+                      *, start_pos: Optional[Sequence[int]] = None,
+                      prefix_blocks: Optional[Sequence] = None,
+                      ) -> List[PrefillCursor]:
+        """Claim slots for a batch of prompts and register one in-flight
+        :class:`PrefillCursor` per row — no model compute yet beyond the
+        enc-dec encoder and prefix-block loads.  Slot allocation is
+        all-or-nothing: on ``OutOfBlocks`` every slot claimed so far is
+        released before the error propagates.  Cursors persist on the
+        engine until ``advance_prefill`` completes them or
+        ``cancel_prefill`` abandons them."""
         n = len(prompts)
         prompts = [np.asarray(p, np.int32) for p in prompts]
         encoder_inputs = encoder_inputs or [None] * n
@@ -261,133 +332,174 @@ class ServingEngine:
                          else [()] * n)
         for p, sp in zip(prompts, start_pos):
             assert 0 <= sp < len(p), (sp, len(p))
-        if not self.paged:
-            out: List[Tuple[int, np.ndarray]] = []
-            try:
-                for p, e, sp, pb in zip(prompts, encoder_inputs,
-                                        start_pos, prefix_blocks):
-                    out.append(self._prefill_dense(p, e, sp, pb))
-            except Exception:
-                for slot, _ in out:          # all-or-nothing, like paged
-                    self.kv.free_slot(slot)
-                raise
-            return out
-
-        slots: List[int] = []
+        cursors: List[PrefillCursor] = []
         try:
-            for p in prompts:
-                slots.append(self.kv.alloc_slot(len(p)))
-            for slot, sp, pb in zip(slots, start_pos, prefix_blocks):
-                if sp:
-                    self.kv.load_prefix_blocks_paged(slot, pb)
-
-            C, Bp = self.prefill_chunk, self.prefill_batch
-            suffix = [len(p) - sp for p, sp in zip(prompts, start_pos)]
-            last_logits: List[Optional[np.ndarray]] = [None] * n
-            # length-sorted packing: similar suffix lengths share waves,
-            # so late rounds run with every row still live instead of
-            # dragging one long prompt alongside q_len=0 padding rows
-            order = sorted(range(n), key=lambda i: -suffix[i])
-            for w0 in range(0, n, Bp):
-                wave = order[w0:w0 + Bp]
-                rounds = -(-max(suffix[i] for i in wave) // C)
-                tables = np.full((Bp, self.kv.blocks_per_slot),
-                                 self.kv.trash_block, np.int32)
-                for r, i in enumerate(wave):
-                    tables[r] = self.kv.table_row(slots[i])
-                tables = jnp.asarray(tables)
-                for c in range(rounds):
-                    toks = np.zeros((Bp, C), np.int32)
-                    starts = np.zeros(Bp, np.int32)
-                    qlens = np.zeros(Bp, np.int32)
-                    for r, i in enumerate(wave):
-                        ql = min(max(suffix[i] - c * C, 0), C)
-                        if ql == 0:
-                            continue         # exhausted: padding row
-                        s0 = start_pos[i] + c * C
-                        toks[r, :ql] = prompts[i][s0:s0 + ql]
-                        starts[r] = s0
-                        qlens[r] = ql
-                    logits, self.kv.cache = self._prefill_paged(
-                        self.params, jnp.asarray(toks), jnp.asarray(starts),
-                        jnp.asarray(qlens), self.kv.cache, tables)
-                    for r, i in enumerate(wave):
-                        li = (suffix[i] - 1) - c * C
-                        if 0 <= li < C:      # row's last real token here
-                            # device-resident slice: no host sync inside
-                            # the round loop, so waves keep dispatching
-                            last_logits[i] = logits[r, li]
-                # FLOPs proxy: every row of the compiled (Bp, C) program
-                # executes every round, dummy rows included
-                self.prefill_tokens_executed += rounds * C * Bp
-                self.prefill_tokens_padding += (rounds * C * Bp
-                                                - sum(suffix[i]
-                                                      for i in wave))
+            for p, e, sp, pb in zip(prompts, encoder_inputs, start_pos,
+                                    prefix_blocks):
+                slot = self.kv.alloc_slot(len(p))
+                cur = PrefillCursor(slot=slot, tokens=p, start_pos=sp,
+                                    pos=sp, seq=self._begin_seq,
+                                    encoder_input=e,
+                                    prefix_blocks=tuple(pb))
+                self._begin_seq += 1
+                cursors.append(cur)
+                if self.paged:
+                    if sp:
+                        self.kv.load_prefix_blocks_paged(slot, pb)
+                elif self.cfg.family == "encdec":
+                    cur.enc1 = self._encode(self.params,
+                                            jnp.asarray(e)[None])
+                    self._enc_pool = self._enc_pool.at[slot].set(cur.enc1[0])
+                # the dense batch-1 staging cache materializes lazily at
+                # the cursor's first advance chunk: N co-admitted dense
+                # prompts waiting their FIFO turn hold N cursors but at
+                # most ONE transient stripe, like the old serial path
         except Exception:
-            # all-or-nothing: an error anywhere (allocation, prefix
-            # load, a prefill round) releases every slot claimed, so
-            # nothing leaks past the caller's OutOfBlocks handling
-            for s in slots:
-                self.kv.free_slot(s)
+            for cur in cursors:              # all-or-nothing
+                self.kv.free_slot(cur.slot)
             raise
-        self.prefill_tokens += sum(suffix)
+        for cur in cursors:
+            self._inflight[cur.slot] = cur
         self.cached_prefix_tokens += sum(start_pos)
-        # one host-transfer pass AFTER every round dispatched
-        return [(slot, np.asarray(ll)) for slot, ll in
-                zip(slots, last_logits)]
+        return cursors
 
-    def _prefill_dense(self, prompt: np.ndarray, encoder_input,
-                       start_pos: int, prefix_blocks: Sequence[int],
-                       ) -> Tuple[int, np.ndarray]:
-        """Dense (and enc-dec) prefill: batch-1 chunk replay through
-        ``decode_step`` into a transient stripe, then slot-scatter."""
-        P = len(prompt)
-        slot = self.kv.alloc_slot(P)
-        try:
-            return self._prefill_dense_into(slot, prompt, encoder_input,
-                                            start_pos, prefix_blocks)
-        except Exception:
-            self.kv.free_slot(slot)          # nothing leaks on failure
-            raise
-
-    def _prefill_dense_into(self, slot: int, prompt: np.ndarray,
-                            encoder_input, start_pos: int,
-                            prefix_blocks: Sequence[int],
-                            ) -> Tuple[int, np.ndarray]:
-        P = len(prompt)
-        enc1 = None
-        if self.cfg.family == "encdec":
-            enc1 = self._encode(self.params,
-                                jnp.asarray(encoder_input)[None])
-            self._enc_pool = self._enc_pool.at[slot].set(enc1[0])
+    def _materialize_dense(self, cur: PrefillCursor) -> None:
+        """Build the cursor's batch-1 staging cache (dense mode only):
+        a fresh ``init_cache`` stripe with the cached prefix loaded."""
         cache1 = T.init_cache(self.cfg, 1, self.max_seq_len)
         self.transient_prefill_bytes = max(
             self.transient_prefill_bytes,
             sum(leaf.nbytes for leaf in jax.tree.leaves(cache1)))
-        if start_pos:
-            cache1 = self.kv.load_prefix_blocks(cache1, prefix_blocks)
+        if cur.start_pos:
+            cache1 = self.kv.load_prefix_blocks(cache1, cur.prefix_blocks)
+        cur.dense_cache = cache1
+
+    def advance_prefill(self, cursors: Optional[Sequence[PrefillCursor]]
+                        = None, token_budget: Optional[int] = None,
+                        ) -> List[PrefillCursor]:
+        """Run chunk rounds against in-flight prefills (``cursors``
+        defaults to every cursor on the engine) until all complete or
+        ``token_budget`` *executed* token positions have run — the
+        FLOPs/latency proxy: a paged round costs ``prefill_batch *
+        prefill_chunk`` whatever the real row contents, a dense chunk
+        costs ``prefill_chunk``.  The first round always runs, so a
+        budget below one round still makes progress (the budget is a
+        cap checked *between* rounds).  Rounds are scheduled FIFO by
+        begin order, so a long prompt keeps advancing even under a
+        sustained stream of later short admissions — no starvation,
+        bounded TTFT for every row.
+
+        Returns the cursors that **completed during this call**, each
+        with device-resident ``last_logits``; unfinished cursors stay
+        parked on the engine for the next call.  On any error every
+        cursor this call touched — finished earlier in the call or
+        still in flight — has its slot released before the error
+        propagates, so one failed round can never leak slots or blocks.
+        """
+        working = [c for c in (cursors if cursors is not None
+                               else list(self._inflight.values()))
+                   if not c.done]
+        for c in working:
+            assert self._inflight.get(c.slot) is c, \
+                f"cursor for slot {c.slot} is not in flight"
+        involved = list(working)
+        finished: List[PrefillCursor] = []
+        spent = 0
         C = self.prefill_chunk
-        n = P - start_pos
-        n_chunks = -(-n // C)
-        padded = np.zeros(n_chunks * C, np.int32)
-        padded[:n] = prompt[start_pos:]
-        last_logits = None
-        pos = start_pos
-        for c in range(n_chunks):
-            chunk = jnp.asarray(padded[c * C:(c + 1) * C])[None]
-            cache1, logits = self._prefill_chunk(
-                self.params, chunk, cache1,
-                jnp.full((1,), pos, jnp.int32), enc1)
-            li = (P - 1) - pos               # last real token in this chunk?
-            if 0 <= li < C:
-                last_logits = logits[li]
-            pos += C
-        self.kv.write_prefill(slot, cache1)
-        self.prefill_tokens += n
-        self.prefill_tokens_executed += n_chunks * C
-        self.prefill_tokens_padding += n_chunks * C - n
-        self.cached_prefix_tokens += start_pos
-        return slot, np.asarray(last_logits)
+
+        def budget_left():
+            return (token_budget is None or spent < token_budget
+                    or spent == 0)
+
+        try:
+            working.sort(key=lambda c: c.seq)    # FIFO by begin order
+            if self.paged:
+                Bp = self.prefill_batch
+                while working and budget_left():
+                    sel = working[:Bp]
+                    tables = np.full((Bp, self.kv.blocks_per_slot),
+                                     self.kv.trash_block, np.int32)
+                    toks = np.zeros((Bp, C), np.int32)
+                    starts = np.zeros(Bp, np.int32)
+                    qlens = np.zeros(Bp, np.int32)
+                    for r, cur in enumerate(sel):
+                        tables[r] = self.kv.table_row(cur.slot)
+                        ql = min(cur.remaining, C)
+                        toks[r, :ql] = cur.tokens[cur.pos:cur.pos + ql]
+                        starts[r] = cur.pos
+                        qlens[r] = ql
+                    logits, self.kv.cache = self._prefill_paged(
+                        self.params, jnp.asarray(toks), jnp.asarray(starts),
+                        jnp.asarray(qlens), self.kv.cache,
+                        jnp.asarray(tables))
+                    real = int(qlens.sum())
+                    # FLOPs proxy: every row of the compiled (Bp, C)
+                    # program executes every round, dummy rows included
+                    spent += Bp * C
+                    self.prefill_tokens += real
+                    self.prefill_tokens_executed += Bp * C
+                    self.prefill_tokens_padding += Bp * C - real
+                    for r, cur in enumerate(sel):
+                        cur.pos += int(qlens[r])
+                        if cur.done:
+                            # device-resident slice: no host sync inside
+                            # the round loop, so rounds keep dispatching
+                            cur.last_logits = logits[r, int(qlens[r]) - 1]
+                            finished.append(cur)
+                    working = [c for c in working if not c.done]
+            else:
+                for cur in working:
+                    while not cur.done and budget_left():
+                        if cur.dense_cache is None:
+                            self._materialize_dense(cur)
+                        ql = min(cur.remaining, C)
+                        chunk = np.zeros(C, np.int32)
+                        chunk[:ql] = cur.tokens[cur.pos:cur.pos + ql]
+                        cur.dense_cache, logits = self._prefill_chunk(
+                            self.params, jnp.asarray(chunk)[None],
+                            cur.dense_cache,
+                            jnp.full((1,), cur.pos, jnp.int32), cur.enc1)
+                        li = (len(cur.tokens) - 1) - cur.pos
+                        if 0 <= li < C:      # row's last real token here
+                            cur.last_logits = logits[li]
+                        cur.pos += ql
+                        spent += C
+                        self.prefill_tokens += ql
+                        self.prefill_tokens_executed += C
+                        self.prefill_tokens_padding += C - ql
+                    if cur.done:
+                        self.kv.write_prefill(cur.slot, cur.dense_cache)
+                        cur.dense_cache = None
+                        finished.append(cur)
+                    if not budget_left():
+                        break
+        except Exception:
+            # all-or-nothing per call: an error anywhere releases every
+            # slot this call touched (the caller never learned of the
+            # rows that finished just before the failure), so nothing
+            # leaks past the caller's error handling
+            for cur in involved:
+                self._inflight.pop(cur.slot, None)
+                self.kv.free_slot(cur.slot)
+            raise
+        for cur in finished:
+            del self._inflight[cur.slot]
+        return finished
+
+    def cancel_prefill(self, slot: int) -> None:
+        """Abandon an in-flight prefill (mid-prefill preemption): the
+        cursor is dropped, the slot and its KV blocks return to the
+        pool, and any dense staging cache is discarded.  The caller
+        re-queues the request; it resumes later from whatever the prefix
+        cache still holds."""
+        self._inflight.pop(slot)
+        self.kv.free_slot(slot)
+
+    @property
+    def inflight_prefill_tokens(self) -> int:
+        """Real token positions still to execute across in-flight
+        cursors (telemetry; the scheduler's budget debt)."""
+        return sum(c.remaining for c in self._inflight.values())
 
     def decode_once(self, tokens: np.ndarray,
                     positions: np.ndarray) -> jnp.ndarray:
@@ -401,8 +513,13 @@ class ServingEngine:
                  "cache": self.kv.cache}
         if self.paged:
             # free slots' rows point at the trash block; their dummy
-            # writes and speculative gathers never touch live KV
-            batch["block_tables"] = self.kv.device_block_tables()
+            # writes and speculative gathers never touch live KV.  A
+            # mid-prefill slot's table maps real blocks already, so its
+            # row is masked to the trash block too — otherwise its
+            # dummy decode write at position 0 would corrupt KV the
+            # prefill just produced
+            batch["block_tables"] = self.kv.device_block_tables(
+                mask_slots=self._inflight)
         if self._enc_pool is not None:
             batch["encoder_output"] = self._enc_pool
         logits, self.kv.cache = self._step(self.params, batch)

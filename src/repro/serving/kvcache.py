@@ -207,6 +207,8 @@ class PagedKVCache:
             self._tables = np.full((max_slots, self.blocks_per_slot),
                                    self.trash_block, np.int32)
             self._tables_dev = None
+            self._masked_dev = None       # masked-table upload cache
+            self._masked_key = ()
             self._save_paged = None       # built with the prefix store
         else:
             self.cache = T.init_cache(cfg, max_slots, max_seq_len)
@@ -483,7 +485,7 @@ class PagedKVCache:
         self.seq_len_of[slot] = prompt_len
         if self.paged:
             self._tables[slot, :len(blocks)] = blocks
-            self._tables_dev = None
+            self._tables_dev = self._masked_dev = None
         return slot
 
     def ensure_capacity(self, slot: int, n_tokens: int) -> None:
@@ -498,7 +500,7 @@ class PagedKVCache:
             table.append(self.pool.alloc())
             if self.paged:
                 self._tables[slot, len(table) - 1] = table[-1]
-                self._tables_dev = None
+                self._tables_dev = self._masked_dev = None
         self.seq_len_of[slot] = max(self.seq_len_of[slot], n_tokens)
 
     def free_slot(self, slot: int) -> None:
@@ -508,16 +510,32 @@ class PagedKVCache:
         self._free_slots.append(slot)
         if self.paged:
             self._tables[slot, :] = self.trash_block
-            self._tables_dev = None
+            self._tables_dev = self._masked_dev = None
 
-    def device_block_tables(self) -> jnp.ndarray:
+    def device_block_tables(self, mask_slots: Sequence[int] = ()
+                            ) -> jnp.ndarray:
         """The (max_slots, blocks_per_slot) int32 block-table tensor the
         paged decode step gathers through; uploaded lazily after ledger
-        mutations.  Unbacked entries name the trash block."""
+        mutations.  Unbacked entries name the trash block.
+
+        ``mask_slots`` re-routes those slots' rows to the trash block —
+        the decode step passes the mid-prefill slots here so their
+        dummy decode rows can never touch KV the prefill already wrote.
+        The masked upload is cached too (keyed by the mask), so steady
+        interleaved decode pays one host-to-device transfer per ledger
+        or mask change, not one per step."""
         assert self.paged, "block tables are device-resident in paged mode"
-        if self._tables_dev is None:
-            self._tables_dev = jnp.asarray(self._tables)
-        return self._tables_dev
+        key = tuple(sorted(mask_slots))
+        if not key:
+            if self._tables_dev is None:
+                self._tables_dev = jnp.asarray(self._tables)
+            return self._tables_dev
+        if self._masked_dev is None or self._masked_key != key:
+            masked = self._tables.copy()
+            masked[list(key), :] = self.trash_block
+            self._masked_dev = jnp.asarray(masked)
+            self._masked_key = key
+        return self._masked_dev
 
     def write_prefill(self, slot: int, single_cache) -> None:
         """Scatter a batch-1 prefilled cache into ``slot``'s stripe of

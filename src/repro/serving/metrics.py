@@ -53,6 +53,16 @@ class ServingMetrics:
         # folded into the FLOPs proxy
         self.prefill_tokens_real: int = 0
         self.prefill_tokens_executed: int = 0
+        # decode-step latency jitter: timestamp of every decode step;
+        # the gaps between consecutive steps are the inter-token
+        # latencies every running sequence experiences — the number
+        # SplitFuse-style interleaving exists to bound
+        self.decode_step_times: List[float] = []
+        # prefill-budget accounting (interleaved scheduling): per
+        # budgeted round, executed tokens vs the configured budget
+        self.budget_rounds: int = 0
+        self.budget_tokens_executed: int = 0
+        self.budget_tokens_cap: int = 0
 
     # -- recording -----------------------------------------------------------
 
@@ -84,12 +94,21 @@ class ServingMetrics:
         self.prefill_tokens_real += real
         self.prefill_tokens_executed += executed
 
+    def record_budget(self, executed: int, budget: int) -> None:
+        """One budgeted prefill round: ``executed`` token positions ran
+        against a cap of ``budget`` (utilization may exceed 1.0 — the
+        first chunk round of a step always runs whole)."""
+        self.budget_rounds += 1
+        self.budget_tokens_executed += executed
+        self.budget_tokens_cap += budget
+
     def sample_gauges(self, queue_depth: int, active: int,
                       max_slots: int) -> None:
         self.queue_depth.append(queue_depth)
         self.active_slots.append(active)
         self.max_slots = max_slots
         self.decode_steps += 1
+        self.decode_step_times.append(self.clock())
 
     # -- reduction -----------------------------------------------------------
 
@@ -100,6 +119,13 @@ class ServingMetrics:
     def latency_s(self) -> List[float]:
         return [self._finish[r] - self._submit[r] for r in self._finish
                 if r in self._submit]
+
+    def decode_gaps_s(self) -> List[float]:
+        """Inter-token gaps: time between consecutive decode steps.  An
+        admission wave's prefill runs between two decode steps, so a
+        wave-at-once stall shows up as one huge gap here."""
+        t = self.decode_step_times
+        return [b - a for a, b in zip(t, t[1:])]
 
     def summary(self) -> Dict[str, object]:
         ttft, lat = self.ttft_s(), self.latency_s()
@@ -138,6 +164,13 @@ class ServingMetrics:
                     (self.prefill_tokens_executed - self.prefill_tokens_real)
                     / max(self.prefill_tokens_executed, 1)),
             },
+            "decode_gap_ms": self._decode_gap_summary(),
+            "prefill_budget": {
+                "rounds": self.budget_rounds,
+                "tokens_executed": self.budget_tokens_executed,
+                "utilization": (self.budget_tokens_executed
+                                / max(self.budget_tokens_cap, 1)),
+            },
             "prefix_cache": {
                 "hits": self.prefix_hits,
                 "misses": self.prefix_misses,
@@ -149,6 +182,16 @@ class ServingMetrics:
                                           / max(self.prompt_tokens, 1)),
                 "evictions": self.prefix_evictions,
             },
+        }
+
+    def _decode_gap_summary(self) -> Dict[str, float]:
+        gaps = self.decode_gaps_s()
+        return {
+            "p50": _pct(gaps, 0.5) * 1e3,
+            "p95": _pct(gaps, 0.95) * 1e3,
+            "max": max(gaps, default=0.0) * 1e3,
+            "mean": sum(gaps) / len(gaps) * 1e3 if gaps else 0.0,
+            "count": len(gaps),
         }
 
     def to_json(self, **extra) -> str:
@@ -174,7 +217,37 @@ def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
     pf = [s["prefill_tokens"] for s in summaries if "prefill_tokens" in s]
     pf_real = sum(p["real"] for p in pf)
     pf_exec = sum(p["executed"] for p in pf)
+    # jitter percentiles: only replicas that actually decoded carry
+    # gaps.  A replica with zero decode steps (or one step — no gap)
+    # reports count 0 and must contribute NOTHING: folding its 0.0
+    # percentiles into a mean (or counting it in the denominator) would
+    # dilute the fleet's jitter numbers — the double-counting bug class
+    # this merge had with prefix stats.  Percentile merge is the
+    # conservative cross-replica bound (max); the mean is weighted by
+    # each replica's gap count.
+    dg = [s["decode_gap_ms"] for s in summaries
+          if s.get("decode_gap_ms", {}).get("count", 0) > 0]
+    n_gaps = sum(d["count"] for d in dg)
+    decode_gap = {
+        "p50": max((d["p50"] for d in dg), default=0.0),
+        "p95": max((d["p95"] for d in dg), default=0.0),
+        "max": max((d["max"] for d in dg), default=0.0),
+        "mean": (sum(d["mean"] * d["count"] for d in dg) / n_gaps
+                 if n_gaps else 0.0),
+        "count": n_gaps,
+    }
+    # budget utilization weighted by budgeted rounds, same rationale
+    pb = [s["prefill_budget"] for s in summaries
+          if s.get("prefill_budget", {}).get("rounds", 0) > 0]
+    pb_rounds = sum(b["rounds"] for b in pb)
+    pb_exec = sum(b["tokens_executed"] for b in pb)
+    pb_util = (sum(b["utilization"] * b["rounds"] for b in pb) / pb_rounds
+               if pb_rounds else 0.0)
     return {
+        "decode_gap_ms": decode_gap,
+        "prefill_budget": {"rounds": pb_rounds,
+                           "tokens_executed": pb_exec,
+                           "utilization": pb_util},
         "prefill_tokens": {
             "real": pf_real, "executed": pf_exec,
             "padding": pf_exec - pf_real,

@@ -4,22 +4,41 @@ One scheduler drives one :class:`~repro.serving.engine.ServingEngine`
 (conceptually: the serving process inside one ``ch-run`` capsule).  The
 loop is the standard continuous-batching shape:
 
-    admit:  drain the queue into free slots in *batches*: as many
-            queued prompts as slots, KV blocks, and the engine's
-            ``prefill_batch`` allow are co-prefilled through ONE
-            compiled chunked program per round
-            (``engine.prefill_into_slots``); each request's prefix-cache
-            probe still runs first so only uncached suffixes execute,
-            and all first tokens of a batch are sampled in one
-            vectorized call (TTFT = one shared batched prefill instead
-            of a serial train of them);
-    decode: one ``decode_once`` over the pooled cache advances *every*
-            live sequence by one token, each sampled with its own
-            ``SamplingParams``;
-    retire: a sequence that hits its own ``max_new_tokens`` or emits its
-            ``eos_token`` leaves immediately — its KV blocks return to
-            the ring, its prefix-block pins are released, and the slot
-            is refilled on the next admit, mid-decode of the others.
+    admit:   drain the queue into free slots in *batches*: as many
+             queued prompts as slots, KV blocks, and the engine's
+             ``prefill_batch`` allow claim slots and become *in-flight
+             prefills* (``engine.begin_prefill``); each request's
+             prefix-cache probe still runs first so only uncached
+             suffixes will execute;
+    prefill: run at most ``prefill_token_budget`` executed token
+             positions of chunked prefill across the in-flight cursors
+             (``engine.advance_prefill``) — SplitFuse-style
+             interleaving: instead of draining every admission's chunk
+             rounds before the next decode step, each scheduler step is
+             a *token-budgeted round* of prefill fused with one decode
+             step, so running sequences never stall for a whole
+             admission wave.  Rows whose prompt completes sample their
+             first tokens in one vectorized call and join decode the
+             same step; unfinished rows stay parked on the engine,
+             resumable mid-prompt next step.  ``None`` (the default)
+             removes the cap — wave-at-once admission, the PR 4 shape;
+    decode:  one ``decode_once`` over the pooled cache advances *every*
+             live sequence by one token, each sampled with its own
+             ``SamplingParams`` (mid-prefill slots' rows are masked to
+             the trash block by the engine);
+    retire:  a sequence that hits its own ``max_new_tokens`` or emits
+             its ``eos_token`` leaves immediately — its KV blocks
+             return to the ring, its prefix-block pins are released,
+             and the slot is refilled on the next admit, mid-decode of
+             the others.
+
+Partially-prefilled slots are first-class scheduler state
+(``self.prefilling``): decode-time preemption may pick one as victim
+(``engine.cancel_prefill`` — it wastes the least finished work), an
+engine error during a prefill round re-queues every in-flight admission
+with prefix pins released, gateway drain keeps stepping until in-flight
+prefills finish, and a preempted mid-prefill request resumes later from
+whatever the prefix cache holds at that point.
 
 Prefix-cache interplay: the matched blocks are pinned (refcounted) for
 the request's lifetime so LRU eviction can never reclaim KV a live
@@ -76,6 +95,8 @@ class _ReqState:
     finish_reason: str = ""
     cached_len: int = 0                # tokens served from the prefix cache
     prefix_blocks: List[int] = field(default_factory=list)   # pinned blocks
+    inflight_seq: Optional[np.ndarray] = None   # sequence mid-prefill
+    prefix_counted: bool = False       # one record_prefix per request
 
 
 class Scheduler:
@@ -84,16 +105,28 @@ class Scheduler:
     def __init__(self, engine: ServingEngine,
                  metrics: Optional[ServingMetrics] = None,
                  clock=time.perf_counter,
-                 max_admissions_per_step: Optional[int] = None):
+                 max_admissions_per_step: Optional[int] = None,
+                 prefill_token_budget: Optional[int] = None):
         self.engine = engine
         self.max_slots = engine.max_slots
         # cap on requests admitted per scheduler step (None = drain all
         # that fit).  1 reproduces the old one-at-a-time admission — the
         # benchmark baseline — and smooths decode latency under bursts.
         self.max_admissions_per_step = max_admissions_per_step
+        # SplitFuse knob: max *executed* prefill token positions per
+        # step (None = unbudgeted wave-at-once).  Each step then fuses
+        # at most this much chunked prefill with one decode round, so
+        # decode latency jitter under admission bursts is bounded by
+        # the budget, not by the whole wave.
+        if prefill_token_budget is not None and prefill_token_budget <= 0:
+            raise ValueError(
+                f"prefill_token_budget must be positive or None, got "
+                f"{prefill_token_budget}")
+        self.prefill_token_budget = prefill_token_budget
         self.metrics = metrics or ServingMetrics(clock=clock)
         self.queue: deque = deque()
         self.active: Dict[int, _ReqState] = {}          # slot -> state
+        self.prefilling: Dict[int, _ReqState] = {}      # slot -> mid-prefill
         self.done: Dict[int, _ReqState] = {}            # rid  -> state
         self.draining = False
         self.preemptions = 0               # decode-time OutOfBlocks defers
@@ -142,11 +175,11 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.queue or self.active)
+        return bool(self.queue or self.active or self.prefilling)
 
     @property
     def load(self) -> int:
-        return len(self.queue) + len(self.active)
+        return len(self.queue) + len(self.active) + len(self.prefilling)
 
     def prefix_match_len(self, prompt: np.ndarray) -> int:
         """Longest cached prefix this replica holds (gateway affinity)."""
@@ -171,6 +204,10 @@ class Scheduler:
         kv = self.engine.kv
         pc = self.prefix_cache
         states, seqs, starts, blocks_lists = [], [], [], []
+        # in-flight prefills haven't inserted their prefix yet either:
+        # a candidate sharing a block with one must defer the same way
+        inflight_seqs = [st.inflight_seq for st in self.prefilling.values()
+                         if st.inflight_seq is not None]
         blocks_needed = 0
         while (self.queue and len(states) < limit
                and len(states) < kv.free_slot_count):
@@ -197,7 +234,8 @@ class Scheduler:
                     self.admission_stalls += 1
                 break
             if pc is not None and any(
-                    self._shares_block(seq, s) for s in seqs):
+                    self._shares_block(seq, s)
+                    for s in seqs + inflight_seqs):
                 # the candidate shares >= one KV block of prefix with a
                 # request already in this batch: defer it one round so
                 # it can HIT the prefix the earlier request is about to
@@ -217,9 +255,11 @@ class Scheduler:
         return states, seqs, starts, blocks_lists
 
     def _admit(self) -> int:
-        """Batched admission; returns how many requests were admitted
-        (the step loop uses this to tell a capped-but-progressing round
-        from a genuine admission deadlock)."""
+        """Batched admission: claim slots + pins and register in-flight
+        prefill cursors (no chunk rounds yet — those run under the
+        budget in ``_advance_prefill``).  Returns how many requests were
+        admitted (the step loop uses this to tell a capped-but-
+        progressing round from a genuine admission deadlock)."""
         admitted = 0
         pc = self.prefix_cache
         while self.queue and self.engine.kv.free_slot_count > 0:
@@ -231,10 +271,8 @@ class Scheduler:
             states, seqs, starts, blocks_lists = self._collect_batch(limit)
             if not states:
                 return admitted
-            real0 = self.engine.prefill_tokens
-            exec0 = self.engine.prefill_tokens_executed
             try:
-                results = self.engine.prefill_into_slots(
+                cursors = self.engine.begin_prefill(
                     seqs, [st.request.encoder_input for st in states],
                     start_pos=starts, prefix_blocks=blocks_lists)
             except Exception as e:
@@ -255,64 +293,119 @@ class Scheduler:
                 self.admission_stalls += 1
                 return admitted
             admitted += len(states)
-            fresh: List[_ReqState] = []
-            fresh_logits: List[np.ndarray] = []
-            for st, seq, (slot, last_logits) in zip(states, seqs, results):
-                resumed = bool(st.emitted)
-                st.slot = slot
+            for st, seq, cur in zip(states, seqs, cursors):
+                st.slot = cur.slot
                 st.admit_seq = self._admit_counter
                 self._admit_counter += 1
-                if pc is not None:
-                    pc.insert(seq, st.slot)
-                    if not resumed:        # one prefix outcome per request
-                        self.metrics.record_prefix(st.cached_len, len(seq))
-                    self.metrics.prefix_evictions = (pc.stats.evicted_blocks
-                                                     - self._evict_base)
-                st.pos = len(seq)
-                if resumed:                         # last token still pending
-                    self.active[st.slot] = st
-                else:
-                    fresh.append(st)
-                    fresh_logits.append(np.asarray(last_logits))
-            if fresh:
-                # every first token of the batch in one vectorized sample
-                toks = self.engine.sample_tokens(
-                    np.stack(fresh_logits),
-                    np.asarray([st.request.params.temperature
-                                for st in fresh], np.float32),
-                    np.asarray([st.request.params.greedy for st in fresh]))
-                for st, tok in zip(fresh, toks):
-                    tok = int(tok)
-                    st.emitted.append(tok)
-                    self.metrics.record_first_token(st.rid)
-                    if not self._maybe_retire(st, tok):
-                        self.active[st.slot] = st
-            self.metrics.record_prefill_work(
-                self.engine.prefill_tokens - real0,
-                self.engine.prefill_tokens_executed - exec0)
+                st.inflight_seq = seq
+                st.pos = len(seq)          # cache position once prefill ends
+                if pc is not None and not st.prefix_counted:
+                    # one prefix outcome per request, even across
+                    # mid-prefill preemptions and re-admissions
+                    st.prefix_counted = True
+                    self.metrics.record_prefix(st.cached_len, len(seq))
+                self.prefilling[cur.slot] = st
         return admitted
 
+    def _advance_prefill(self) -> int:
+        """One budgeted round of chunked prefill across every in-flight
+        admission.  Completed rows insert their prefix, sample their
+        first token (fresh admissions) in one vectorized call, and join
+        the decode set; unfinished rows stay in ``self.prefilling`` with
+        their cursor parked on the engine.  Returns how many rows
+        completed."""
+        if not self.prefilling:
+            return 0
+        pc = self.prefix_cache
+        real0 = self.engine.prefill_tokens
+        exec0 = self.engine.prefill_tokens_executed
+        try:
+            completed = self.engine.advance_prefill(
+                token_budget=self.prefill_token_budget)
+        except Exception:
+            # the engine released every in-flight slot (all-or-nothing
+            # per advance call): requeue every mid-prefill request with
+            # its pins released, oldest admission back at the head, then
+            # let the error propagate with the scheduler state intact
+            for st in sorted(self.prefilling.values(),
+                             key=lambda s: -s.admit_seq):
+                if pc is not None and st.prefix_blocks:
+                    pc.release(st.prefix_blocks)
+                st.prefix_blocks = []
+                st.slot = -1
+                st.cached_len = 0
+                st.inflight_seq = None
+                self.queue.appendleft(st)
+            self.prefilling.clear()
+            raise
+        executed = self.engine.prefill_tokens_executed - exec0
+        self.metrics.record_prefill_work(
+            self.engine.prefill_tokens - real0, executed)
+        if self.prefill_token_budget is not None:
+            self.metrics.record_budget(executed, self.prefill_token_budget)
+        fresh: List[_ReqState] = []
+        fresh_logits: List[np.ndarray] = []
+        for cur in completed:
+            st = self.prefilling.pop(cur.slot)
+            seq, st.inflight_seq = st.inflight_seq, None
+            if pc is not None:
+                pc.insert(seq, st.slot)
+                self.metrics.prefix_evictions = (pc.stats.evicted_blocks
+                                                 - self._evict_base)
+            if st.emitted:                      # resumed: last token pending
+                self.active[st.slot] = st
+            else:
+                fresh.append(st)
+                fresh_logits.append(np.asarray(cur.last_logits))
+        if fresh:
+            # every first token of the round in one vectorized sample
+            toks = self.engine.sample_tokens(
+                np.stack(fresh_logits),
+                np.asarray([st.request.params.temperature
+                            for st in fresh], np.float32),
+                np.asarray([st.request.params.greedy for st in fresh]))
+            for st, tok in zip(fresh, toks):
+                tok = int(tok)
+                st.emitted.append(tok)
+                self.metrics.record_first_token(st.rid)
+                if not self._maybe_retire(st, tok):
+                    self.active[st.slot] = st
+        return len(completed)
+
     def _preempt(self, st: _ReqState) -> None:
-        """Defer a live request: free its slot and KV blocks, release its
-        prefix pins, and put it back at the head of the queue.  It will
-        resume by re-prefilling prompt + emitted tokens (recompute-style
-        preemption) once blocks are available again."""
-        self.active.pop(st.slot, None)
-        self.engine.free_slot(st.slot)
+        """Defer a live or mid-prefill request: free its slot and KV
+        blocks (cancelling the in-flight cursor if its prefill never
+        finished), release its prefix pins, and put it back at the head
+        of the queue.  It will resume by re-prefilling prompt + emitted
+        tokens (recompute-style preemption) once blocks are available
+        again, probing the prefix cache afresh — partial prefill work
+        survives only through whatever prefixes are cached."""
+        if st.slot in self.prefilling:
+            self.prefilling.pop(st.slot)
+            self.engine.cancel_prefill(st.slot)
+            st.inflight_seq = None
+        else:
+            self.active.pop(st.slot, None)
+            self.engine.free_slot(st.slot)
         if st.prefix_blocks:
             self.prefix_cache.release(st.prefix_blocks)
             st.prefix_blocks = []
         st.slot = -1
+        st.cached_len = 0
         self.queue.appendleft(st)
         self.preemptions += 1
 
     def _pick_victim(self, exclude_slot: int) -> Optional[_ReqState]:
-        """Most recently *admitted* live request other than the one
-        trying to grow — freeing the youngest admission wastes the least
-        finished work.  (Admission recency, not rid: a resumed old
-        request is younger than a long-running new one.)"""
+        """Most recently *admitted* live or mid-prefill request other
+        than the one trying to grow — freeing the youngest admission
+        wastes the least finished work, and a mid-prefill slot (always
+        among the youngest) wastes none of its decode progress.
+        (Admission recency, not rid: a resumed old request is younger
+        than a long-running new one.)"""
         candidates = [st for slot, st in self.active.items()
                       if slot != exclude_slot]
+        candidates += [st for slot, st in self.prefilling.items()
+                       if slot != exclude_slot]
         return (max(candidates, key=lambda st: st.admit_seq)
                 if candidates else None)
 
@@ -355,23 +448,28 @@ class Scheduler:
                         break              # st itself deferred; move on
 
     def step(self) -> bool:
-        """Admit into free slots, then decode one token for every live
-        sequence.  Returns False when there was nothing to do."""
+        """One token-budgeted round: admit into free slots, run at most
+        ``prefill_token_budget`` executed tokens of chunked prefill
+        across in-flight admissions, then decode one token for every
+        live sequence.  Returns False when there was nothing to do."""
         admitted = self._admit()
+        completed = self._advance_prefill()
         if not self.active:
-            if self.queue and not admitted:
-                # nothing live, nothing admitted: with the pool idle this
-                # is unservable demand, not a transient — fail loudly
-                # instead of spinning forever
+            if self.prefilling:
+                return True                # prefill progressing; no decode yet
+            if self.queue and not admitted and not completed:
+                # nothing live, nothing in flight, nothing admitted:
+                # with the pool idle this is unservable demand, not a
+                # transient — fail loudly instead of spinning forever
                 raise RuntimeError(
                     "admission deadlock: queue non-empty, no active "
                     "sequences, and prefill still cannot get blocks")
             # everything admitted this step retired at its first token
             # (or the admission cap paused the queue): not a deadlock
-            return bool(self.queue) or admitted > 0
+            return bool(self.queue) or admitted > 0 or completed > 0
         self._grow_or_preempt()
-        if not self.active:
-            return bool(self.queue)        # everything deferred; retry
+        if not self.active:                # everything deferred; retry
+            return bool(self.queue or self.prefilling)
         S = self.max_slots
         tokens = np.zeros(S, np.int32)
         positions = np.zeros(S, np.int32)

@@ -1,0 +1,531 @@
+"""Interleaved prefill/decode scheduling (SplitFuse-style): the
+token-budgeted scheduler round, resumable mid-prompt prefill cursors,
+mid-prefill preemption, jitter telemetry, and the hardened invariant
+stress harness (bit-identical greedy outputs vs the dense oracle, zero
+leaked slots / blocks / prefix pins under random workloads)."""
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving import (OutOfBlocks, ReplicaGateway, Request,
+                           SamplingParams, Scheduler, ServingEngine,
+                           ServingMetrics, merge_summaries)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(qwen, *, slots=3, seq=48, block=8, chunk=8, prefill_batch=2,
+            **kw):
+    cfg, params = qwen
+    return ServingEngine(cfg, params, max_seq_len=seq, max_slots=slots,
+                         kv_block_size=block, prefill_chunk=chunk,
+                         prefill_batch=prefill_batch, **kw)
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(0, cfg.vocab_size, n, dtype=np.int32)
+
+
+def _assert_no_leaks(sched):
+    """The invariant triad: no live scheduler state, no in-flight
+    cursors, every slot and KV block back in the pool, and zero prefix
+    pins held once the tree itself is evicted."""
+    eng = sched.engine
+    assert not sched.queue and not sched.active and not sched.prefilling
+    assert not eng._inflight
+    assert eng.kv.pool.in_use == 0
+    assert eng.kv.free_slot_count == eng.max_slots
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.evict(10 ** 9)    # drop the tree's own refs
+        assert eng.kv.prefix_pool.in_use == 0, "leaked prefix pins"
+
+
+_ORACLE_CACHE = {}
+
+
+def _dense_oracle(qwen, prompts, max_news, *, seq=48, slots=3):
+    """Greedy outputs served on the dense layout — the bit-identity
+    reference for every interleaved variant (cached per workload so
+    parametrized sweeps don't rebuild identical oracle engines)."""
+    key = (tuple(tuple(int(x) for x in p) for p in prompts),
+           tuple(max_news), seq, slots)
+    if key not in _ORACLE_CACHE:
+        eng = _engine(qwen, slots=slots, seq=seq)
+        sched = Scheduler(eng)
+        rids = [sched.submit(Request(p, SamplingParams(max_new_tokens=m,
+                                                       greedy=True)))
+                for p, m in zip(prompts, max_news)]
+        sched.run()
+        _ORACLE_CACHE[key] = [sched.output(r) for r in rids]
+    return _ORACLE_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# the budgeted round / resumable cursors
+# ---------------------------------------------------------------------------
+
+def test_budget_must_be_positive(qwen):
+    with pytest.raises(ValueError, match="prefill_token_budget"):
+        Scheduler(_engine(qwen), prefill_token_budget=0)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_advance_prefill_is_resumable(qwen, paged):
+    """Engine-level cursor API: a tiny budget suspends mid-prompt, the
+    cursor's state survives between calls, and the completed row's
+    logits match the run-to-completion path bit-for-bit."""
+    eng = _engine(qwen, paged=paged)
+    cfg, _ = qwen
+    prompt = ((np.arange(21) * 5 + 2) % cfg.vocab_size).astype(np.int32)
+    ref_eng = _engine(qwen, paged=paged)
+    slot_ref, ref = ref_eng.prefill_into_slots([prompt])[0]
+
+    [cur] = eng.begin_prefill([prompt])
+    assert cur.slot in eng._inflight and cur.pos == 0
+    done = eng.advance_prefill(token_budget=1)     # one chunk round only
+    assert done == [] and 0 < cur.pos < len(prompt)
+    assert eng.inflight_prefill_tokens == len(prompt) - cur.pos
+    mid = cur.pos
+    done = eng.advance_prefill(token_budget=10 ** 9)
+    assert done == [cur] and cur.done and cur.pos == len(prompt)
+    assert mid < cur.pos and not eng._inflight
+    np.testing.assert_array_equal(np.asarray(cur.last_logits), ref)
+    eng.free_slot(cur.slot)
+    ref_eng.free_slot(slot_ref)
+
+
+def test_budgeted_step_interleaves_decode_with_prefill(qwen):
+    """The tentpole behavior: while a long admission's prefill is still
+    in flight across steps, the running sequence keeps emitting one
+    token per step instead of stalling for the whole wave."""
+    cfg, _ = qwen
+    eng = _engine(qwen, paged=True)
+    sched = Scheduler(eng, prefill_token_budget=8)   # one (2, 8) round/step
+    rng = np.random.default_rng(0)
+    r_long = sched.submit(Request(_prompt(rng, cfg, 4),
+                                  SamplingParams(max_new_tokens=12,
+                                                 greedy=True)))
+    sched.step()                                    # long-runner admitted
+    assert len(sched.active) == 1
+    st_long = next(iter(sched.active.values()))
+    n0 = len(st_long.emitted)
+    r_burst = sched.submit(Request(_prompt(rng, cfg, 33),
+                                   SamplingParams(max_new_tokens=2,
+                                                  greedy=True)))
+    interleaved_steps = 0
+    while sched.has_work:
+        sched.step()
+        if sched.prefilling:                        # burst mid-prefill...
+            assert len(st_long.emitted) > n0        # ...decode advanced
+            interleaved_steps += 1
+            n0 = len(st_long.emitted)
+    # a 33-token prompt at 8 executed tokens/step is mid-flight for
+    # several consecutive fused rounds
+    assert interleaved_steps >= 3
+    assert len(sched.output(r_long)) == 12
+    assert len(sched.output(r_burst)) == 2
+    _assert_no_leaks(sched)
+
+
+@pytest.mark.parametrize("budget", [8, 16, 40, None])
+@pytest.mark.parametrize("paged", [False, True])
+def test_budgets_are_bit_identical_to_dense_oracle(qwen, budget, paged):
+    """Interleaving changes WHEN prefill chunks run, never what they
+    compute: greedy outputs are bit-identical across budgets, layouts,
+    and the unbudgeted wave-at-once path."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(7)
+    prompts = [_prompt(rng, cfg, n) for n in (3, 19, 33, 9, 26)]
+    max_news = [6, 3, 5, 8, 2]
+    oracle = _dense_oracle(qwen, prompts, max_news)
+    eng = _engine(qwen, paged=paged, prefix_cache_blocks=16)
+    sched = Scheduler(eng, prefill_token_budget=budget)
+    rids = [sched.submit(Request(p, SamplingParams(max_new_tokens=m,
+                                                   greedy=True)))
+            for p, m in zip(prompts, max_news)]
+    sched.run()
+    for r, ref in zip(rids, oracle):
+        np.testing.assert_array_equal(sched.output(r), ref)
+    _assert_no_leaks(sched)
+
+
+def test_long_prefill_not_starved_by_short_arrivals(qwen):
+    """Advance rounds are FIFO by begin order: a long prompt keeps
+    advancing under a sustained stream of later short admissions
+    instead of being starved by a shortest-first policy (its TTFT stays
+    bounded)."""
+    cfg, _ = qwen
+    eng = _engine(qwen, slots=6, paged=True)     # Bp=2: 2 rows per round
+    sched = Scheduler(eng, prefill_token_budget=8)
+    rng = np.random.default_rng(8)
+    r_long = sched.submit(Request(_prompt(rng, cfg, 33),
+                                  SamplingParams(max_new_tokens=1,
+                                                 greedy=True)))
+    steps = 0
+    while r_long not in sched.done and steps < 12:
+        for _ in range(2):                       # two shorts per step
+            sched.submit(Request(_prompt(rng, cfg, 6),
+                                 SamplingParams(max_new_tokens=1,
+                                                greedy=True)))
+        sched.step()
+        steps += 1
+    # 33 tokens at >= 8/step alongside one short per round: done well
+    # inside the cap; shortest-first would still be at pos 0 here
+    assert r_long in sched.done
+    sched.run()                                  # drain the short tail
+    _assert_no_leaks(sched)
+
+
+def test_dense_staging_cache_materializes_lazily(qwen):
+    """Dense co-admission holds one cursor per prompt but at most ONE
+    transient batch-1 stripe: a cursor's staging cache appears at its
+    first chunk and is dropped at completion, so a deep admission batch
+    can't multiply peak prefill memory."""
+    cfg, _ = qwen
+    eng = _engine(qwen)                          # dense, chunk=8
+    prompts = [((np.arange(12) * k + 1) % cfg.vocab_size).astype(np.int32)
+               for k in (3, 5, 7)]
+    cursors = eng.begin_prefill(prompts)
+    assert all(c.dense_cache is None for c in cursors)
+    eng.advance_prefill(token_budget=1)          # one chunk: cursor 0 only
+    assert cursors[0].dense_cache is not None
+    assert cursors[1].dense_cache is None and cursors[2].dense_cache is None
+    done = eng.advance_prefill()
+    assert len(done) == 3
+    assert all(c.dense_cache is None for c in cursors)   # dropped on write
+    for c in cursors:
+        eng.free_slot(c.slot)
+
+
+# ---------------------------------------------------------------------------
+# mid-prefill preemption (paged + dense)
+# ---------------------------------------------------------------------------
+
+def test_mid_prefill_preemption_paged(qwen):
+    """Decode-time OutOfBlocks while a slot is partially prefilled:
+    the mid-prefill admission (the youngest) is the victim — cursor
+    cancelled, blocks and pins released, request re-queued — and every
+    request still completes with oracle-identical output."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(1)
+    long_p, burst_p = _prompt(rng, cfg, 14), _prompt(rng, cfg, 24)
+    oracle = _dense_oracle(qwen, [long_p, burst_p], [14, 2])
+    # pool of 5 blocks: long holds 2 and must grow to a 3rd at pos 17
+    # while the burst's 3 claimed blocks keep the pool dry
+    eng = _engine(qwen, paged=True, num_blocks=5)
+    sched = Scheduler(eng, prefill_token_budget=8)
+    r_long = sched.submit(Request(long_p, SamplingParams(max_new_tokens=14,
+                                                         greedy=True)))
+    while not sched.active:                       # long admitted + decoding
+        sched.step()
+    assert len(sched.active) == 1
+    r_burst = sched.submit(Request(burst_p, SamplingParams(max_new_tokens=2,
+                                                           greedy=True)))
+    sched.step()
+    assert sched.prefilling, "burst should be suspended mid-prefill"
+    saw_mid_prefill_preemption = False
+    while sched.has_work:
+        was_prefilling = bool(sched.prefilling)
+        pre = sched.preemptions
+        sched.step()
+        if sched.preemptions > pre and was_prefilling:
+            saw_mid_prefill_preemption = True
+            assert not sched.prefilling           # cursor cancelled...
+            assert not eng._inflight
+            assert any(st.rid == r_burst for st in sched.queue)  # ...requeued
+    assert saw_mid_prefill_preemption
+    np.testing.assert_array_equal(sched.output(r_long), oracle[0])
+    np.testing.assert_array_equal(sched.output(r_burst), oracle[1])
+    _assert_no_leaks(sched)
+
+
+def test_mid_prefill_preemption_dense(qwen, monkeypatch):
+    """Dense layout: the pool can't physically run dry, so inject one
+    decode-time OutOfBlocks while a prefill is suspended — the same
+    requeue path must run (staging cache discarded, no double-free)."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(2)
+    long_p, burst_p = _prompt(rng, cfg, 5), _prompt(rng, cfg, 30)
+    oracle = _dense_oracle(qwen, [long_p, burst_p], [10, 3])
+    eng = _engine(qwen)
+    sched = Scheduler(eng, prefill_token_budget=8)
+    r_long = sched.submit(Request(long_p, SamplingParams(max_new_tokens=10,
+                                                         greedy=True)))
+    sched.step()
+    r_burst = sched.submit(Request(burst_p, SamplingParams(max_new_tokens=3,
+                                                           greedy=True)))
+    sched.step()
+    assert sched.prefilling
+    real = eng.kv.ensure_capacity
+    fired = {"n": 0}
+
+    def flaky(slot, n_tokens):
+        if fired["n"] == 0:
+            fired["n"] += 1
+            raise OutOfBlocks("injected decode-time exhaustion")
+        return real(slot, n_tokens)
+
+    monkeypatch.setattr(eng.kv, "ensure_capacity", flaky)
+    sched.step()                       # preempts the mid-prefill burst
+    assert fired["n"] == 1
+    assert sched.preemptions == 1 and not sched.prefilling
+    assert not eng._inflight
+    sched.run()
+    np.testing.assert_array_equal(sched.output(r_long), oracle[0])
+    np.testing.assert_array_equal(sched.output(r_burst), oracle[1])
+    _assert_no_leaks(sched)
+
+
+def test_mid_prefill_preemption_resumes_from_prefix_cache(qwen):
+    """A preempted mid-prefill request releases its pins and re-probes
+    on resume — hitting whatever prefix its siblings cached meanwhile
+    instead of recomputing from scratch."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(3)
+    shared = _prompt(rng, cfg, 16)                # two full KV blocks
+    p_a = np.concatenate([shared, _prompt(rng, cfg, 7)])    # 3 blocks
+    p_b = np.concatenate([shared, _prompt(rng, cfg, 21)])   # 5 blocks
+    oracle = _dense_oracle(qwen, [p_a, p_b], [12, 2])
+    # A (3 blocks) + B (5) fit an 8-block pool exactly; A's growth past
+    # pos 24 two decode steps after B's admission forces the preemption
+    # while B (21 uncached tokens at 4/step) is still mid-prefill
+    eng = _engine(qwen, paged=True, num_blocks=8, chunk=4,
+                  prefix_cache_blocks=16)
+    sched = Scheduler(eng, prefill_token_budget=8)
+    r_a = sched.submit(Request(p_a, SamplingParams(max_new_tokens=12,
+                                                   greedy=True)))
+    while not sched.active:                        # A prefilled + inserted
+        sched.step()
+    r_b = sched.submit(Request(p_b, SamplingParams(max_new_tokens=2,
+                                                   greedy=True)))
+    while sched.has_work and not sched.preemptions:
+        sched.step()
+    assert sched.preemptions >= 1
+    # the victim is B, caught mid-prefill: back at the queue head with
+    # no first token ever sampled and its cursor cancelled
+    st_b = next(st for st in sched.queue if st.rid == r_b)
+    assert st_b.emitted == [] and st_b.slot == -1
+    assert st_b.slot not in eng._inflight
+    # its first admission was warm (16 cached tokens recorded once)
+    assert sched.metrics.cached_tokens_served >= 16
+    cached0 = eng.cached_prefix_tokens
+    sched.run()
+    # the resume re-admitted B through the prefix cache a second time
+    assert eng.cached_prefix_tokens >= cached0 + 16
+    np.testing.assert_array_equal(sched.output(r_a), oracle[0])
+    np.testing.assert_array_equal(sched.output(r_b), oracle[1])
+    _assert_no_leaks(sched)
+
+
+def test_advance_error_requeues_inflight_with_pins_released(qwen,
+                                                            monkeypatch):
+    """An engine error inside a prefill round (device OOM analogue)
+    cancels every in-flight cursor, re-queues the requests with pins
+    released, and leaves the scheduler consistent enough to retry."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(4)
+    prompts = [_prompt(rng, cfg, n) for n in (18, 25)]
+    oracle = _dense_oracle(qwen, prompts, [3, 3])
+    eng = _engine(qwen, paged=True, prefix_cache_blocks=16)
+    sched = Scheduler(eng, prefill_token_budget=8)
+    rids = [sched.submit(Request(p, SamplingParams(max_new_tokens=3,
+                                                   greedy=True)))
+            for p in prompts]
+    sched.step()
+    assert sched.prefilling
+    boom = RuntimeError("injected device failure")
+    real = eng._prefill_paged
+
+    def flaky(*a, **kw):
+        monkeypatch.setattr(eng, "_prefill_paged", real)   # fail once
+        raise boom
+
+    monkeypatch.setattr(eng, "_prefill_paged", flaky)
+    with pytest.raises(RuntimeError, match="injected device failure"):
+        sched.step()
+    assert not sched.prefilling and not eng._inflight
+    assert eng.kv.pool.in_use == 0                 # slots + blocks released
+    assert len(sched.queue) == len(rids)           # nobody lost
+    sched.run()                                    # retry succeeds
+    for r, ref in zip(rids, oracle):
+        np.testing.assert_array_equal(sched.output(r), ref)
+    _assert_no_leaks(sched)
+
+
+def test_gateway_drain_completes_inflight_prefills(qwen):
+    """Graceful drain keeps stepping until in-flight prefills finish:
+    a request suspended mid-prompt when admission closes still
+    completes, and `load` counts it while it is in flight."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(5)
+    gw = ReplicaGateway.from_engines(
+        [_engine(qwen, paged=True)], prefill_token_budget=8)
+    h1 = gw.submit(Request(_prompt(rng, cfg, 4),
+                           SamplingParams(max_new_tokens=4, greedy=True)))
+    gw.step()
+    h2 = gw.submit(Request(_prompt(rng, cfg, 33),
+                           SamplingParams(max_new_tokens=2, greedy=True)))
+    gw.step()
+    sched = gw.replicas[0].scheduler
+    assert sched.prefilling and sched.load >= 2
+    gw.drain()
+    assert len(gw.result(h1)) == 4 and len(gw.result(h2)) == 2
+    _assert_no_leaks(sched)
+
+
+# ---------------------------------------------------------------------------
+# telemetry: jitter percentiles, budget utilization, gateway merge
+# ---------------------------------------------------------------------------
+
+def test_decode_gap_jitter_and_budget_metrics(qwen):
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.25
+        return t[0]
+
+    cfg, _ = qwen
+    eng = _engine(qwen, paged=True)
+    sched = Scheduler(eng, clock=clock, prefill_token_budget=16)
+    rng = np.random.default_rng(6)
+    for n, m in ((4, 6), (21, 2)):
+        sched.submit(Request(_prompt(rng, cfg, n),
+                             SamplingParams(max_new_tokens=m, greedy=True)))
+    sched.run()
+    s = sched.metrics.summary()
+    dg = s["decode_gap_ms"]
+    assert dg["count"] == s["decode_steps"] - 1
+    assert dg["max"] >= dg["p95"] >= dg["p50"] > 0
+    pb = s["prefill_budget"]
+    assert pb["rounds"] > 0 and pb["tokens_executed"] > 0
+    assert pb["utilization"] > 0
+
+
+def test_merge_carries_jitter_without_zero_decode_double_count(qwen):
+    """The satellite fix: a replica that decoded nothing reports gap
+    count 0 and must not dilute (or zero out) the merged percentiles
+    or the budget utilization."""
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.5
+        return t[0]
+
+    sched = Scheduler(_engine(qwen), clock=clock, prefill_token_budget=16)
+    rid = sched.submit(Request(np.array([1, 2, 3], np.int32),
+                               SamplingParams(max_new_tokens=4,
+                                              greedy=True)))
+    sched.run()
+    busy = sched.metrics.summary()
+    idle = ServingMetrics(clock=clock).summary()   # zero decode steps
+    assert idle["decode_gap_ms"]["count"] == 0
+    merged = merge_summaries([busy, idle])
+    assert merged["decode_gap_ms"] == busy["decode_gap_ms"]
+    assert merged["prefill_budget"]["utilization"] == \
+        busy["prefill_budget"]["utilization"]
+    # order must not matter either
+    merged2 = merge_summaries([idle, busy])
+    assert merged2["decode_gap_ms"] == merged["decode_gap_ms"]
+    _ = rid
+
+
+# ---------------------------------------------------------------------------
+# invariant stress harness: random workloads vs the dense oracle
+# ---------------------------------------------------------------------------
+
+def _stress_case(qwen, seed: int, budget, num_blocks: int, n_req: int,
+                 share_prefix: bool):
+    """One randomized workload: mixed prompt lengths (optionally with a
+    shared prefix to exercise pins), an undersized paged pool for
+    preemption pressure, and a token budget.  Asserts the full
+    invariant triad + bit-identical greedy outputs vs the
+    **same-layout wave-at-once oracle** (budget None): interleaving
+    changes when chunks run, never what they compute, so this must be
+    exact whatever the workload.  The dense-layout comparison lives in
+    the curated tests above instead — random workloads can land on
+    near-tie logits where the paged kernel's page-wise online softmax
+    legitimately flips an argmax against the dense path by float
+    summation order (a pre-existing kernel/layout property this harness
+    surfaced, not a scheduler defect)."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(seed)
+    shared = _prompt(rng, cfg, 8) if share_prefix else np.empty(0, np.int32)
+    prompts, max_news = [], []
+    for _i in range(n_req):
+        tail = _prompt(rng, cfg, int(rng.integers(1, 21)))
+        p = np.concatenate([shared, tail]).astype(np.int32)
+        m = int(rng.integers(1, 9))
+        if len(p) + m > 40:                        # keep admissible
+            p = p[:40 - m]
+        prompts.append(p)
+        max_news.append(m)
+
+    def serve(token_budget):
+        eng = _engine(qwen, paged=True, num_blocks=num_blocks,
+                      prefix_cache_blocks=12)
+        sched = Scheduler(eng, prefill_token_budget=token_budget)
+        rids = [sched.submit(Request(p, SamplingParams(max_new_tokens=m,
+                                                       greedy=True)))
+                for p, m in zip(prompts, max_news)]
+        sched.run()
+        return [sched.output(r) for r in rids], sched
+
+    oracle, osched = serve(None)                   # wave-at-once
+    outs, sched = serve(budget)
+    for out, ref in zip(outs, oracle):
+        np.testing.assert_array_equal(out, ref)
+    assert sched.metrics.summary()["requests_completed"] == n_req
+    _assert_no_leaks(sched)
+    _assert_no_leaks(osched)
+    return sched
+
+
+def test_interleaved_stress_quick(qwen):
+    """Tier-1 depth: a couple of adversarial configurations, including
+    an undersized pool that forces preemption."""
+    sched = _stress_case(qwen, seed=10, budget=8, num_blocks=7, n_req=6,
+                         share_prefix=True)
+    assert sched.preemptions + sched.admission_stalls > 0, \
+        "stress config no longer exercises the OutOfBlocks paths"
+    _stress_case(qwen, seed=11, budget=16, num_blocks=18, n_req=5,
+                 share_prefix=False)
+
+
+@pytest.mark.slow
+def test_interleaved_stress_deep(qwen):
+    """CI depth (deselect with `-m "not slow"`): a seeded sweep over
+    budgets x pool sizes x workload shapes."""
+    for seed, budget, blocks, n_req, share in (
+            (20, 8, 7, 7, True),        # starved pool: preemption + stalls
+            (21, 24, 9, 6, False),      # mid budget, no sharing
+            (23, 8, 18, 8, True)):      # ample pool: max concurrency mix
+        _stress_case(qwen, seed=seed, budget=budget, num_blocks=blocks,
+                     n_req=n_req, share_prefix=share)
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       budget=st.integers(min_value=1, max_value=64),
+       num_blocks=st.integers(min_value=6, max_value=18),
+       n_req=st.integers(min_value=1, max_value=8))
+def test_interleaved_stress_property(seed, budget, num_blocks, n_req):
+    """Hypothesis-driven form of the same harness (skipped when
+    hypothesis is absent from the capsule image): any admissible
+    workload retires every request with bit-identical greedy output
+    and zero leaked pins / slots / blocks."""
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    cfg = get_smoke_config("qwen2-0.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    _stress_case((cfg, params), seed=seed, budget=budget,
+                 num_blocks=num_blocks, n_req=n_req,
+                 share_prefix=seed % 2 == 0)
