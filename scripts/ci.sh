@@ -8,7 +8,10 @@
 # `benchmarks.run --check`, which also validates every emitted
 # BENCH_*.json artifact (bit_identical_outputs true where present,
 # nonzero completed requests) so a silently-broken benchmark fails the
-# build.
+# build.  The tracing benchmark (quick mode) asserts enabled-tracing
+# wall clock within 5% of disabled and emits results/trace_sample.jsonl,
+# which trace_report.py --validate then schema-checks (every event: ts,
+# kind from the documented enum, step and/or rid).
 # Usage: scripts/ci.sh [extra pytest args]
 # CI runs the full suite (including the slow-marked interleaved
 # scheduler stress sweep); pass `-m "not slow"` for the quick tier.
@@ -20,4 +23,6 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.prefix_cache
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.paged_attention
 # --check exits nonzero on a FAILED row or an unhealthy BENCH_*.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
-    --only batched_prefill,interleaved --check
+    --only batched_prefill,interleaved,tracing --check
+# trace JSONL schema gate on the sample the tracing benchmark just wrote
+python scripts/trace_report.py --validate results/trace_sample.jsonl

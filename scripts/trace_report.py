@@ -1,0 +1,224 @@
+#!/usr/bin/env python
+"""Offline text report / schema validator for serving trace JSONL files.
+
+The serving stack's tracing is file-based by design (capsules on the
+secure cluster cannot host a collector endpoint): the operator copies a
+``*.jsonl`` event log out of the allocation and inspects it offline.
+This script is the no-GUI half of that workflow — the Chrome trace file
+covers the visual half in Perfetto.
+
+Modes
+-----
+``python scripts/trace_report.py TRACE.jsonl``
+    Render a text summary: top stall causes (admission stalls by reason,
+    ``out_of_blocks`` by context), per-request critical path (queue wait
+    -> time-to-first-token -> decode, with preemption counts), and
+    prefill-budget utilization per engine step.
+
+``python scripts/trace_report.py --validate TRACE.jsonl [...]``
+    Schema check used by CI: every line must parse as JSON and satisfy
+    :func:`repro.serving.tracing.validate_event` — numeric ``ts``,
+    ``kind`` from the documented ``EVENT_KINDS`` enum, integer ``step``
+    and/or ``rid``, ``rid`` mandatory for request-scoped kinds.  Exits
+    nonzero on the first file with violations.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter, defaultdict
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.serving.tracing import EVENT_KINDS, validate_event  # noqa: E402
+
+
+def load_events(path: Path) -> List[dict]:
+    events = []
+    with path.open() as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# --validate
+# ---------------------------------------------------------------------------
+
+def validate_file(path: Path, max_errors: int = 10) -> int:
+    """Returns the number of schema violations (prints the first few)."""
+    errors = 0
+    with path.open() as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors += 1
+                if errors <= max_errors:
+                    print(f"{path}:{lineno}: not JSON: {e}")
+                continue
+            err = validate_event(ev)
+            if err is not None:
+                errors += 1
+                if errors <= max_errors:
+                    print(f"{path}:{lineno}: {err}")
+    if errors > max_errors:
+        print(f"{path}: ... and {errors - max_errors} more violations")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+def _span_key(ev: dict) -> Tuple[str, int]:
+    return (ev.get("replica", ""), ev["rid"])
+
+
+def _fmt_ms(dt: Optional[float]) -> str:
+    return f"{dt * 1e3:9.2f}" if dt is not None else "        -"
+
+
+def report(events: List[dict], top: int = 10) -> None:
+    if not events:
+        print("empty trace: no events")
+        return
+    t0 = min(ev["ts"] for ev in events)
+    kinds = Counter(ev["kind"] for ev in events)
+    replicas = sorted({ev.get("replica", "") for ev in events})
+    print(f"{len(events)} events, {len(kinds)} kinds, "
+          f"replicas: {', '.join(r or '(unstamped)' for r in replicas)}, "
+          f"span {(max(ev['ts'] for ev in events) - t0) * 1e3:.1f} ms")
+
+    # -- top stall causes ---------------------------------------------------
+    stalls: Counter = Counter()
+    for ev in events:
+        if ev["kind"] == "admission_stall":
+            stalls[f"admission_stall:{ev.get('reason', '?')}"] += 1
+        elif ev["kind"] == "out_of_blocks":
+            stalls[f"out_of_blocks:{ev.get('context', '?')}"] += 1
+        elif ev["kind"] == "preempt":
+            stalls["preempt" + (":mid_prefill" if ev.get("mid_prefill")
+                                else ":decode")] += 1
+    print("\n== top stall causes ==")
+    if not stalls:
+        print("  none recorded")
+    for cause, n in stalls.most_common(top):
+        print(f"  {n:6d}  {cause}")
+
+    # -- per-request critical path ------------------------------------------
+    spans: Dict[Tuple[str, int], Dict[str, object]] = defaultdict(dict)
+    for ev in events:
+        if "rid" not in ev or ev["rid"] < 0:
+            continue
+        sp = spans[_span_key(ev)]
+        k = ev["kind"]
+        if k in ("submit", "first_token", "retire"):
+            sp.setdefault(k, ev["ts"])
+        elif k == "admit":
+            # first admission only: a resumed re-admit is not queue wait
+            sp.setdefault("admit", ev["ts"])
+        elif k == "preempt":
+            sp["preempts"] = int(sp.get("preempts", 0)) + 1
+        elif k == "decode":
+            sp["decodes"] = int(sp.get("decodes", 0)) + 1
+        if k == "retire":
+            sp["n_tokens"] = ev.get("n_tokens", 0)
+            sp["reason"] = ev.get("reason", "?")
+
+    def total(sp: Dict[str, object]) -> float:
+        if "submit" in sp and "retire" in sp:
+            return float(sp["retire"]) - float(sp["submit"])  # type: ignore
+        return -1.0
+
+    print("\n== per-request critical path (slowest first) ==")
+    print("  replica/rid       queue ms   ttft ms  decode ms  total ms"
+          "  toks  preempts  reason")
+    ranked = sorted(spans.items(), key=lambda kv: -total(kv[1]))
+    for (replica, rid), sp in ranked[:top]:
+        sub = sp.get("submit")
+        adm = sp.get("admit")
+        ft = sp.get("first_token")
+        ret = sp.get("retire")
+        queue = (adm - sub) if sub is not None and adm is not None else None
+        ttft = (ft - sub) if sub is not None and ft is not None else None
+        dec = (ret - ft) if ft is not None and ret is not None else None
+        tot = (ret - sub) if sub is not None and ret is not None else None
+        label = f"{replica}/req{rid}" if replica else f"req{rid}"
+        print(f"  {label:<16s} {_fmt_ms(queue)} {_fmt_ms(ttft)}"
+              f" {_fmt_ms(dec)} {_fmt_ms(tot)}"
+              f"  {sp.get('n_tokens', '?'):>4}"
+              f"  {sp.get('preempts', 0):>8}"
+              f"  {sp.get('reason', '?')}")
+    if len(ranked) > top:
+        print(f"  ... and {len(ranked) - top} more requests")
+
+    # -- budget utilization per step ----------------------------------------
+    steps = [ev for ev in events if ev["kind"] == "engine_step"]
+    budgeted = [ev for ev in steps if ev.get("budget", 0) > 0
+                and ev.get("prefill_executed", 0) > 0]
+    print("\n== engine steps ==")
+    print(f"  {len(steps)} steps recorded, "
+          f"{sum(1 for ev in steps if ev.get('decoded'))} decoded, "
+          f"{len(budgeted)} ran budgeted prefill")
+    if budgeted:
+        utils = [ev["prefill_executed"] / ev["budget"] for ev in budgeted]
+        print(f"  budget utilization: mean {sum(utils) / len(utils):.2f}, "
+              f"min {min(utils):.2f}, max {max(utils):.2f} "
+              f"(>1.0 = first chunk round of a step always runs whole)")
+        print("  step  executed/budget  util   free_blocks  queue  active")
+        for ev in budgeted[:top]:
+            print(f"  {ev['step']:>4}  {ev['prefill_executed']:>8}/"
+                  f"{ev['budget']:<6}  {ev['prefill_executed'] / ev['budget']:4.2f}"
+                  f"   {ev.get('free_blocks', '?'):>10}"
+                  f"  {ev.get('queue_depth', '?'):>5}"
+                  f"  {ev.get('active', '?'):>6}")
+        if len(budgeted) > top:
+            print(f"  ... and {len(budgeted) - top} more budgeted steps")
+    if steps:
+        last = steps[-1]
+        print(f"  final gauges: free_blocks={last.get('free_blocks', '?')} "
+              f"free_slots={last.get('free_slots', '?')} "
+              f"queue_depth={last.get('queue_depth', '?')} "
+              f"inflight={last.get('inflight', '?')} "
+              f"prefix_pins={last.get('prefix_pins', '?')}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("traces", nargs="+", type=Path,
+                    help="trace JSONL file(s)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check only; exit nonzero on violations")
+    ap.add_argument("--top", type=int, default=10,
+                    help="rows per report section (default 10)")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        bad = 0
+        for path in args.traces:
+            n_events = sum(1 for line in path.open() if line.strip())
+            errors = validate_file(path)
+            bad += errors
+            status = "OK" if errors == 0 else f"{errors} violations"
+            print(f"{path}: {n_events} events, "
+                  f"{len(EVENT_KINDS)} known kinds: {status}")
+        return 1 if bad else 0
+
+    for path in args.traces:
+        if len(args.traces) > 1:
+            print(f"\n### {path}")
+        report(load_events(path), top=args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,12 +14,17 @@ open with the same K synthetic tokens to exercise it.
       --requests 8 --max-new 16 --shared-prefix 64
 
 Add ``--metrics-json PATH`` to export the scheduler telemetry for the
-benchmark harness.
+benchmark harness, ``--metrics-out PATH`` for just the gateway-merged
+totals summary, and ``--trace-out BASE`` to enable request-lifecycle
+tracing and write ``BASE.jsonl`` (merged event log) plus
+``BASE.chrome.json`` (Perfetto / chrome://tracing) at end of run;
+``--trace-buffer-events`` sizes the per-replica ring buffer.
 """
 from __future__ import annotations
 
 import argparse
 import json
+from pathlib import Path
 
 
 def main(argv=None):
@@ -34,7 +39,18 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--temperature", type=float, default=1.0)
-    ap.add_argument("--metrics-json", default=None)
+    ap.add_argument("--metrics-json", default=None,
+                    help="export full per-replica + merged telemetry JSON")
+    ap.add_argument("--metrics-out", default=None,
+                    help="export only the gateway-merged totals summary "
+                         "JSON at end of run")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable request-lifecycle tracing; writes "
+                         "PATH.jsonl (merged events) + PATH.chrome.json "
+                         "(Perfetto) at end of run")
+    ap.add_argument("--trace-buffer-events", type=int, default=None,
+                    help="per-replica trace ring-buffer depth "
+                         "(default 65536; oldest events drop first)")
     ap.add_argument("--paged", action="store_true",
                     help="paged attention: block-resident KV gathered "
                          "through block tables (Pallas kernel)")
@@ -74,7 +90,9 @@ def main(argv=None):
                              prefill_batch=args.prefill_batch)
                for r in range(args.replicas)]
     gateway = ReplicaGateway.from_engines(
-        engines, prefill_token_budget=args.prefill_token_budget)
+        engines, prefill_token_budget=args.prefill_token_budget,
+        tracing=args.trace_out is not None,
+        trace_buffer_events=args.trace_buffer_events)
     print(f"run config: arch={cfg.name} replicas={args.replicas} "
           f"max_slots={args.max_slots} max_seq_len={args.max_seq_len} "
           f"paged={args.paged} num_blocks={args.num_blocks} "
@@ -122,6 +140,20 @@ def main(argv=None):
         with open(args.metrics_json, "w") as f:
             json.dump(stats, f, indent=2, sort_keys=True, default=str)
         print(f"metrics -> {args.metrics_json}")
+    if args.metrics_out:
+        out = Path(args.metrics_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(stats["totals"], indent=2, sort_keys=True,
+                                  default=str) + "\n")
+        print(f"merged metrics summary -> {out}")
+    if args.trace_out:
+        jsonl = gateway.export_trace_jsonl(f"{args.trace_out}.jsonl")
+        chrome = gateway.export_chrome_trace(f"{args.trace_out}.chrome.json")
+        n_ev = sum(tr.emitted_events for tr in gateway.tracers)
+        n_drop = sum(tr.dropped_events for tr in gateway.tracers)
+        print(f"trace: {n_ev} events ({n_drop} dropped by ring) -> "
+              f"{jsonl} + {chrome} "
+              f"(inspect: python scripts/trace_report.py {jsonl})")
 
 
 if __name__ == "__main__":

@@ -6,3 +6,6 @@ from repro.serving.kvcache import KVBlockPool, OutOfBlocks, PagedKVCache
 from repro.serving.metrics import ServingMetrics, merge_summaries
 from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
 from repro.serving.scheduler import Scheduler
+from repro.serving.tracing import (EVENT_KINDS, Tracer, export_chrome_trace,
+                                   export_jsonl, merge_traces,
+                                   to_chrome_trace, validate_event)

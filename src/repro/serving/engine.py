@@ -181,6 +181,10 @@ class ServingEngine:
         self.prefill_tokens_padding = 0      # executed - real
         self.cached_prefix_tokens = 0        # tokens served from the store
         self.transient_prefill_bytes = 0     # peak batch-1 staging cache
+        # bound by the scheduler that drives this engine (one tracer per
+        # replica); None until then — engine-side trace emission is
+        # guarded so direct primitive use stays untraced
+        self.tracer = None
         self._inflight: Dict[int, PrefillCursor] = {}   # slot -> cursor
         self._begin_seq = 0                  # FIFO stamp for cursors
         self._step = jax.jit(make_serve_step(cfg))
@@ -406,6 +410,7 @@ class ServingEngine:
         finished: List[PrefillCursor] = []
         spent = 0
         C = self.prefill_chunk
+        tr = self.tracer
 
         def budget_left():
             return (token_budget is None or spent < token_budget
@@ -441,6 +446,9 @@ class ServingEngine:
                     self.prefill_tokens_padding += Bp * C - real
                     for r, cur in enumerate(sel):
                         cur.pos += int(qlens[r])
+                        if tr is not None and tr.enabled and qlens[r]:
+                            tr.prefill_advance(cur.slot, int(qlens[r]),
+                                               cur.pos, len(cur.tokens))
                         if cur.done:
                             # device-resident slice: no host sync inside
                             # the round loop, so rounds keep dispatching
@@ -467,6 +475,9 @@ class ServingEngine:
                         self.prefill_tokens += ql
                         self.prefill_tokens_executed += C
                         self.prefill_tokens_padding += C - ql
+                        if tr is not None and tr.enabled:
+                            tr.prefill_advance(cur.slot, ql, cur.pos,
+                                               len(cur.tokens))
                     if cur.done:
                         self.kv.write_prefill(cur.slot, cur.dense_cache)
                         cur.dense_cache = None

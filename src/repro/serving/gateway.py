@@ -37,6 +37,8 @@ import numpy as np
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.metrics import merge_summaries
 from repro.serving.scheduler import Scheduler
+from repro.serving.tracing import (Tracer, export_jsonl,
+                                   export_chrome_trace, merge_traces)
 
 
 @dataclass
@@ -64,9 +66,24 @@ class ReplicaGateway:
 
     @classmethod
     def from_engines(cls, engines: List[ServingEngine], *,
-                     affinity_slack: int = 2,
+                     affinity_slack: int = 2, tracing: bool = False,
+                     trace_buffer_events: Optional[int] = None,
                      **sched_kw) -> "ReplicaGateway":
-        return cls([CapsuleReplica(f"replica{i}", Scheduler(e, **sched_kw))
+        """``tracing=True`` gives every replica an enabled
+        :class:`~repro.serving.tracing.Tracer` (ring depth
+        ``trace_buffer_events``) on the shared process clock, so
+        :meth:`trace_events` can interleave the fleet's buffers into one
+        timeline."""
+        def sched(i, e):
+            kw = dict(sched_kw)
+            if "tracer" not in kw:
+                tkw = {"enabled": tracing, "name": f"replica{i}"}
+                if trace_buffer_events is not None:
+                    tkw["buffer_events"] = trace_buffer_events
+                kw["tracer"] = Tracer(**tkw)
+            return Scheduler(e, **kw)
+
+        return cls([CapsuleReplica(f"replica{i}", sched(i, e))
                     for i, e in enumerate(engines)],
                    affinity_slack=affinity_slack)
 
@@ -76,8 +93,10 @@ class ReplicaGateway:
         return min(range(len(self.replicas)),
                    key=lambda i: (self.replicas[i].load, i))
 
-    def _route(self, request: Request) -> int:
-        """Prefix affinity first, hash ownership second, load third."""
+    def _route(self, request: Request) -> Tuple[int, str, int]:
+        """Prefix affinity first, hash ownership second, load third.
+        Returns ``(replica index, reason, prefix match length)`` so the
+        decision is traceable, not just its outcome."""
         floor = min(rep.load for rep in self.replicas)
         matches = [rep.scheduler.prefix_match_len(request.prompt)
                    for rep in self.replicas]
@@ -88,7 +107,7 @@ class ReplicaGateway:
             # a warm cache is not worth unbounded queueing: same slack
             # rule as hash ownership
             if self.replicas[idx].load <= floor + self.affinity_slack:
-                return idx
+                return idx, "prefix_affinity", best
         caching = [i for i, rep in enumerate(self.replicas)
                    if rep.scheduler.prefix_cache is not None]
         if caching and len(request.prompt) > 0:
@@ -98,18 +117,21 @@ class ReplicaGateway:
             head = np.asarray(request.prompt[:kv.block_size], np.int32)
             owner = caching[zlib.crc32(head.tobytes()) % len(caching)]
             if self.replicas[owner].load <= floor + self.affinity_slack:
-                return owner
-        return self._least_loaded()
+                return owner, "hash_owner", best
+        return self._least_loaded(), "least_loaded", best
 
     def submit(self, request: Request) -> Tuple[int, int]:
         """Route with prefix affinity / least load; returns a
         (replica, rid) handle usable with :meth:`result`."""
         if self.draining:
             raise RuntimeError("gateway is draining; admission closed")
-        idx = self._route(request)
+        idx, reason, match_len = self._route(request)
         rep = self.replicas[idx]
         rep.routed += 1
-        return idx, rep.scheduler.submit(request)
+        rid = rep.scheduler.submit(request)
+        rep.scheduler.tracer.route(rid, rep.name, reason, match_len,
+                                   rep.load)
+        return idx, rid
 
     # -- progress ------------------------------------------------------------
 
@@ -147,6 +169,28 @@ class ReplicaGateway:
         per = {rep.name: {**s, "routed": rep.routed, "capsule": rep.capsule}
                for rep, s in zip(self.replicas, summaries)}
         return {"replicas": per, "totals": merge_summaries(summaries)}
+
+    # -- tracing -------------------------------------------------------------
+
+    @property
+    def tracers(self) -> List[Tracer]:
+        return [rep.scheduler.tracer for rep in self.replicas]
+
+    def trace_events(self) -> List[Dict[str, Any]]:
+        """The fleet's merged timeline: every replica's ring buffer
+        interleaved on the shared clock, replica-stamped."""
+        return merge_traces(self.tracers)
+
+    def export_trace_jsonl(self, path):
+        """Merged JSONL event log (one JSON object per line)."""
+        return export_jsonl(self.trace_events(), path)
+
+    def export_chrome_trace(self, path):
+        """Chrome trace-event file: replicas as processes, request spans
+        as async lanes — loads directly in Perfetto/chrome://tracing."""
+        return export_chrome_trace(
+            {rep.name: rep.scheduler.tracer.snapshot()
+             for rep in self.replicas}, path)
 
 
 def launch_capsule_replicas(

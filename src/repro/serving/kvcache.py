@@ -183,6 +183,9 @@ class PagedKVCache:
         if num_blocks <= 0:
             raise ValueError(f"num_blocks must be positive, got {num_blocks}")
         self.pool = KVBlockPool(num_blocks, block_size)
+        # bound by the scheduler (tracing.Tracer); ledger events — block
+        # alloc/grow/free and OutOfBlocks — land in the replica's trace
+        self.tracer = None
         self._free_slots = deque(range(max_slots))
         self.block_table: Dict[int, List[int]] = {}
         self.seq_len_of: Dict[int, int] = {}
@@ -470,7 +473,10 @@ class PagedKVCache:
             raise ValueError(
                 f"prompt ({prompt_len}) exceeds max_seq_len "
                 f"({self.max_seq_len})")
+        tr = self.tracer
         if not self._free_slots:
+            if tr is not None and tr.enabled:
+                tr.out_of_blocks("alloc_slot:no_free_slot")
             raise OutOfBlocks("no free slot")
         slot = self._free_slots.popleft()
         blocks: List[int] = []
@@ -480,37 +486,53 @@ class PagedKVCache:
         except OutOfBlocks:
             self.pool.free(blocks)
             self._free_slots.appendleft(slot)
+            if tr is not None and tr.enabled:
+                tr.out_of_blocks("alloc_slot:pool_dry", slot)
             raise
         self.block_table[slot] = blocks
         self.seq_len_of[slot] = prompt_len
         if self.paged:
             self._tables[slot, :len(blocks)] = blocks
             self._tables_dev = self._masked_dev = None
+        if tr is not None and tr.enabled:
+            tr.block_alloc(slot, len(blocks), self.pool.available)
         return slot
 
     def ensure_capacity(self, slot: int, n_tokens: int) -> None:
         """Back token positions [0, n_tokens) with blocks, growing the
         slot's table from the shared pool as decode advances."""
+        tr = self.tracer
         if n_tokens > self.max_seq_len:
             raise OutOfBlocks(
                 f"slot {slot}: {n_tokens} tokens exceeds max_seq_len "
                 f"({self.max_seq_len})")
         table = self.block_table[slot]
         while len(table) * self.block_size < n_tokens:
-            table.append(self.pool.alloc())
+            try:
+                table.append(self.pool.alloc())
+            except OutOfBlocks:
+                if tr is not None and tr.enabled:
+                    tr.out_of_blocks("decode_grow", slot)
+                raise
             if self.paged:
                 self._tables[slot, len(table) - 1] = table[-1]
                 self._tables_dev = self._masked_dev = None
+            if tr is not None and tr.enabled:
+                tr.block_grow(slot, self.pool.available)
         self.seq_len_of[slot] = max(self.seq_len_of[slot], n_tokens)
 
     def free_slot(self, slot: int) -> None:
         """Retire a sequence: its blocks go straight back on the ring."""
-        self.pool.free(self.block_table.pop(slot))
+        blocks = self.block_table.pop(slot)
+        self.pool.free(blocks)
         del self.seq_len_of[slot]
         self._free_slots.append(slot)
         if self.paged:
             self._tables[slot, :] = self.trash_block
             self._tables_dev = self._masked_dev = None
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.block_free(slot, len(blocks), self.pool.available)
 
     def device_block_tables(self, mask_slots: Sequence[int] = ()
                             ) -> jnp.ndarray:

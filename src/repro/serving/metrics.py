@@ -205,10 +205,16 @@ class ServingMetrics:
 
 
 def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
-    """Aggregate per-replica summaries into gateway-level totals."""
+    """Aggregate per-replica summaries into gateway-level totals.
+
+    Edge cases are contractual: an empty list returns the explicit
+    ``{"replicas": 0}`` sentinel (not ``{}``, not an exception), and a
+    single-replica list passes through its numbers unchanged — partial
+    summaries (an idle replica, a hand-built dict missing sections)
+    merge with zero defaults instead of raising or emitting NaN."""
     if not summaries:
-        return {}
-    total_tokens = sum(s["total_new_tokens"] for s in summaries)
+        return {"replicas": 0}
+    total_tokens = sum(s.get("total_new_tokens", 0) for s in summaries)
     pc = [s["prefix_cache"] for s in summaries if "prefix_cache" in s]
     hits = sum(p["hits"] for p in pc)
     misses = sum(p["misses"] for p in pc)
@@ -262,12 +268,15 @@ def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
             "evictions": sum(p["evictions"] for p in pc),
         },
         "replicas": len(summaries),
-        "requests_completed": sum(s["requests_completed"] for s in summaries),
+        "requests_completed": sum(s.get("requests_completed", 0)
+                                  for s in summaries),
         "total_new_tokens": total_tokens,
-        "tokens_per_s": sum(s["tokens_per_s"] for s in summaries),
-        "decode_steps": sum(s["decode_steps"] for s in summaries),
-        "ttft_ms_p95": max(s["ttft_ms"]["p95"] for s in summaries),
-        "latency_ms_p95": max(s["latency_ms"]["p95"] for s in summaries),
-        "slot_occupancy": (sum(s["slot_occupancy"] for s in summaries)
-                           / len(summaries)),
+        "tokens_per_s": sum(s.get("tokens_per_s", 0.0) for s in summaries),
+        "decode_steps": sum(s.get("decode_steps", 0) for s in summaries),
+        "ttft_ms_p95": max((s.get("ttft_ms", {}).get("p95", 0.0)
+                            for s in summaries), default=0.0),
+        "latency_ms_p95": max((s.get("latency_ms", {}).get("p95", 0.0)
+                               for s in summaries), default=0.0),
+        "slot_occupancy": (sum(s.get("slot_occupancy", 0.0)
+                               for s in summaries) / len(summaries)),
     }

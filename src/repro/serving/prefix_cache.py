@@ -118,6 +118,8 @@ class PrefixCache:
         self.block_size = kv.block_size
         self.root = _Node(0, np.empty(0, np.int32), [], None)
         self.stats = PrefixCacheStats()
+        # bound by the scheduler (tracing.Tracer); insert/evict events
+        self.tracer = None
         self._clock = 0
 
     def _tick(self) -> int:
@@ -288,6 +290,9 @@ class PrefixCache:
         leaf.last_used = self._tick()
         parent.children[int(tokens[pos])] = leaf
         self.stats.inserted_blocks += len(blocks)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.prefix_insert(slot, covered_end - pos, len(blocks))
         return covered_end - pos
 
     # -- eviction --------------------------------------------------------
@@ -327,6 +332,7 @@ class PrefixCache:
         insert is extending.  Returns the number of blocks actually
         freed."""
         freed = 0
+        nodes0 = self.stats.evicted_nodes
         while freed < need_blocks:
             candidates = [n for n in self._leaves()
                           if id(n) not in protect and self._evictable(n)]
@@ -334,6 +340,9 @@ class PrefixCache:
                 break
             victim = min(candidates, key=lambda n: n.last_used)
             freed += self._remove(victim)
+        tr = self.tracer
+        if freed and tr is not None and tr.enabled:
+            tr.prefix_evict(freed, self.stats.evicted_nodes - nodes0)
         return freed
 
     def _remove(self, node: _Node) -> int:

@@ -82,6 +82,7 @@ import numpy as np
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.kvcache import OutOfBlocks
 from repro.serving.metrics import ServingMetrics
+from repro.serving.tracing import Tracer
 
 
 @dataclass
@@ -97,6 +98,7 @@ class _ReqState:
     prefix_blocks: List[int] = field(default_factory=list)   # pinned blocks
     inflight_seq: Optional[np.ndarray] = None   # sequence mid-prefill
     prefix_counted: bool = False       # one record_prefix per request
+    admitted_before: bool = False      # re-admission => resumed span
 
 
 class Scheduler:
@@ -106,7 +108,8 @@ class Scheduler:
                  metrics: Optional[ServingMetrics] = None,
                  clock=time.perf_counter,
                  max_admissions_per_step: Optional[int] = None,
-                 prefill_token_budget: Optional[int] = None):
+                 prefill_token_budget: Optional[int] = None,
+                 tracer: Optional[Tracer] = None):
         self.engine = engine
         self.max_slots = engine.max_slots
         # cap on requests admitted per scheduler step (None = drain all
@@ -123,7 +126,20 @@ class Scheduler:
                 f"prefill_token_budget must be positive or None, got "
                 f"{prefill_token_budget}")
         self.prefill_token_budget = prefill_token_budget
-        self.metrics = metrics or ServingMetrics(clock=clock)
+        # one recording path: the tracer owns the metrics and feeds its
+        # counters; a disabled tracer (the default) only forwards —
+        # near-zero overhead over calling the metrics directly.  The
+        # tracer is also bound onto the engine / KV ledger / prefix
+        # cache so their events land in the same per-replica buffer.
+        if tracer is None:
+            tracer = Tracer(metrics or ServingMetrics(clock=clock),
+                            clock=clock)
+        self.tracer = tracer
+        self.metrics = tracer.metrics
+        engine.tracer = tracer
+        engine.kv.tracer = tracer
+        if engine.prefix_cache is not None:
+            engine.prefix_cache.tracer = tracer
         self.queue: deque = deque()
         self.active: Dict[int, _ReqState] = {}          # slot -> state
         self.prefilling: Dict[int, _ReqState] = {}      # slot -> mid-prefill
@@ -170,7 +186,7 @@ class Scheduler:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(_ReqState(rid, request))
-        self.metrics.record_submit(rid)
+        self.tracer.submit(rid)
         return rid
 
     @property
@@ -217,7 +233,7 @@ class Scheduler:
                 self.queue.popleft()
                 st.finish_reason = "length"
                 self.done[st.rid] = st
-                self.metrics.record_finish(st.rid, 0, "length")
+                self.tracer.retire(st.rid, 0, "length")
                 continue
             resumed = bool(st.emitted)              # preempted earlier
             # a resumed request re-prefills prompt + all emitted tokens
@@ -232,6 +248,8 @@ class Scheduler:
                 # once per retry; stall only if nothing at all fit
                 if not states:
                     self.admission_stalls += 1
+                    self.tracer.admission_stall(
+                        "kv_pool_dry", len(self.queue), rid=st.rid)
                 break
             if pc is not None and any(
                     self._shares_block(seq, s)
@@ -291,6 +309,9 @@ class Scheduler:
                 if not isinstance(e, OutOfBlocks):
                     raise
                 self.admission_stalls += 1
+                self.tracer.admission_stall(
+                    "out_of_blocks", len(self.queue),
+                    rid=states[0].rid if states else -1)
                 return admitted
             admitted += len(states)
             for st, seq, cur in zip(states, seqs, cursors):
@@ -299,11 +320,19 @@ class Scheduler:
                 self._admit_counter += 1
                 st.inflight_seq = seq
                 st.pos = len(seq)          # cache position once prefill ends
-                if pc is not None and not st.prefix_counted:
-                    # one prefix outcome per request, even across
-                    # mid-prefill preemptions and re-admissions
+                self.tracer.bind_slot(cur.slot, st.rid)
+                if pc is not None:
+                    # the probe event fires every admission (a resumed
+                    # request's re-probe is part of its span), but the
+                    # metrics count one prefix outcome per request, even
+                    # across mid-prefill preemptions and re-admissions
+                    self.tracer.prefix_probe(st.rid, st.cached_len,
+                                             len(seq),
+                                             count=not st.prefix_counted)
                     st.prefix_counted = True
-                    self.metrics.record_prefix(st.cached_len, len(seq))
+                self.tracer.admit(st.rid, cur.slot, len(seq), st.cached_len,
+                                  resumed=st.admitted_before)
+                st.admitted_before = True
                 self.prefilling[cur.slot] = st
         return admitted
 
@@ -331,6 +360,7 @@ class Scheduler:
                              key=lambda s: -s.admit_seq):
                 if pc is not None and st.prefix_blocks:
                     pc.release(st.prefix_blocks)
+                self.tracer.unbind_slot(st.slot)
                 st.prefix_blocks = []
                 st.slot = -1
                 st.cached_len = 0
@@ -339,10 +369,10 @@ class Scheduler:
             self.prefilling.clear()
             raise
         executed = self.engine.prefill_tokens_executed - exec0
-        self.metrics.record_prefill_work(
+        self.tracer.prefill_work(
             self.engine.prefill_tokens - real0, executed)
         if self.prefill_token_budget is not None:
-            self.metrics.record_budget(executed, self.prefill_token_budget)
+            self.tracer.budget_round(executed, self.prefill_token_budget)
         fresh: List[_ReqState] = []
         fresh_logits: List[np.ndarray] = []
         for cur in completed:
@@ -367,7 +397,7 @@ class Scheduler:
             for st, tok in zip(fresh, toks):
                 tok = int(tok)
                 st.emitted.append(tok)
-                self.metrics.record_first_token(st.rid)
+                self.tracer.first_token(st.rid)
                 if not self._maybe_retire(st, tok):
                     self.active[st.slot] = st
         return len(completed)
@@ -380,7 +410,8 @@ class Scheduler:
         tokens (recompute-style preemption) once blocks are available
         again, probing the prefix cache afresh — partial prefill work
         survives only through whatever prefixes are cached."""
-        if st.slot in self.prefilling:
+        mid_prefill = st.slot in self.prefilling
+        if mid_prefill:
             self.prefilling.pop(st.slot)
             self.engine.cancel_prefill(st.slot)
             st.inflight_seq = None
@@ -390,6 +421,8 @@ class Scheduler:
         if st.prefix_blocks:
             self.prefix_cache.release(st.prefix_blocks)
             st.prefix_blocks = []
+        self.tracer.preempt(st.rid, mid_prefill)
+        self.tracer.unbind_slot(st.slot)
         st.slot = -1
         st.cached_len = 0
         self.queue.appendleft(st)
@@ -425,7 +458,8 @@ class Scheduler:
             self.prefix_cache.release(st.prefix_blocks)
             st.prefix_blocks = []
         self.done[st.rid] = st
-        self.metrics.record_finish(st.rid, len(st.emitted), reason)
+        self.tracer.retire(st.rid, len(st.emitted), reason)
+        self.tracer.unbind_slot(st.slot)
         return True
 
     def _grow_or_preempt(self) -> None:
@@ -447,28 +481,65 @@ class Scheduler:
                     if victim is None:
                         break              # st itself deferred; move on
 
+    def _close_step(self, tr, decoded: bool, admitted: int, completed: int,
+                    executed: int, t0: float, t1: float, t2: float,
+                    t3: float) -> None:
+        """Emit the per-step engine-timeline event (phase breakdown +
+        gauges snapshot) and sample the step gauges into the metrics
+        when a decode round actually ran (the pre-tracing semantics)."""
+        kv = self.engine.kv
+        t4 = tr.clock()
+        tr.engine_step(
+            decoded=decoded, queue_depth=len(self.queue),
+            active=len(self.active), max_slots=self.max_slots,
+            admitted=admitted, completed=completed,
+            prefill_executed=executed, budget=self.prefill_token_budget,
+            dur_admit_s=t1 - t0, dur_prefill_s=t2 - t1,
+            dur_decode_s=t3 - t2, dur_sample_s=t4 - t3,
+            free_blocks=kv.pool.available, free_slots=kv.free_slot_count,
+            inflight=len(self.prefilling),
+            prefix_pins=(kv.prefix_pool.in_use
+                         if kv.prefix_pool is not None else 0))
+
     def step(self) -> bool:
         """One token-budgeted round: admit into free slots, run at most
         ``prefill_token_budget`` executed tokens of chunked prefill
         across in-flight admissions, then decode one token for every
-        live sequence.  Returns False when there was nothing to do."""
+        live sequence.  Returns False when there was nothing to do.
+
+        Every call emits one ``engine_step`` trace event with the phase
+        durations (admission / prefill-advance / decode dispatch /
+        sample+retire) and a gauges snapshot, so a stalled request can
+        be read against what the engine was actually doing that step."""
+        tr = self.tracer
+        t0 = tr.clock()
         admitted = self._admit()
+        t1 = tr.clock()
+        exec0 = self.engine.prefill_tokens_executed
         completed = self._advance_prefill()
+        executed = self.engine.prefill_tokens_executed - exec0
+        t2 = tr.clock()
         if not self.active:
             if self.prefilling:
-                return True                # prefill progressing; no decode yet
-            if self.queue and not admitted and not completed:
+                ret = True                 # prefill progressing; no decode yet
+            elif self.queue and not admitted and not completed:
                 # nothing live, nothing in flight, nothing admitted:
                 # with the pool idle this is unservable demand, not a
                 # transient — fail loudly instead of spinning forever
                 raise RuntimeError(
                     "admission deadlock: queue non-empty, no active "
                     "sequences, and prefill still cannot get blocks")
-            # everything admitted this step retired at its first token
-            # (or the admission cap paused the queue): not a deadlock
-            return bool(self.queue) or admitted > 0 or completed > 0
+            else:
+                # everything admitted this step retired at its first
+                # token (or the admission cap paused the queue)
+                ret = bool(self.queue) or admitted > 0 or completed > 0
+            self._close_step(tr, False, admitted, completed, executed,
+                             t0, t1, t2, t2)
+            return ret
         self._grow_or_preempt()
         if not self.active:                # everything deferred; retry
+            self._close_step(tr, False, admitted, completed, executed,
+                             t0, t1, t2, t2)
             return bool(self.queue or self.prefilling)
         S = self.max_slots
         tokens = np.zeros(S, np.int32)
@@ -481,15 +552,18 @@ class Scheduler:
             temps[slot] = st.request.params.temperature
             greedy[slot] = st.request.params.greedy
         logits = self.engine.decode_once(tokens, positions)
+        t3 = tr.clock()
         toks = self.engine.sample_tokens(logits, temps, greedy)
         for slot in list(self.active):
             st = self.active[slot]
             st.pos += 1
             tok = int(toks[slot])
             st.emitted.append(tok)
+            if tr.enabled:
+                tr.decode(st.rid, st.pos - 1, tok)
             self._maybe_retire(st, tok)
-        self.metrics.sample_gauges(len(self.queue), len(self.active),
-                                   self.max_slots)
+        self._close_step(tr, True, admitted, completed, executed,
+                         t0, t1, t2, t3)
         return True
 
     def run(self) -> None:
