@@ -128,7 +128,7 @@ def main() -> None:
     ap.add_argument("--only", help="comma list: scaling,overhead,ps,physics,"
                                    "roofline,kernels,serving,prefix_cache,"
                                    "paged_attention,batched_prefill,"
-                                   "interleaved,tracing")
+                                   "interleaved,tracing,slo")
     ap.add_argument("--check", action="store_true",
                     help="after running, validate every BENCH_*.json in "
                          "the cwd (bit_identical_outputs true where "
@@ -211,6 +211,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append(("tracing_overhead/FAILED", 0.0, "see stderr"))
+    if want("slo"):
+        from benchmarks import slo_observatory
+        try:
+            rows += slo_observatory.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("slo_observatory/FAILED", 0.0, "see stderr"))
     if want("physics"):
         from benchmarks import physics_validation
         try:

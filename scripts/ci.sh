@@ -11,7 +11,11 @@
 # build.  The tracing benchmark (quick mode) asserts enabled-tracing
 # wall clock within 5% of disabled and emits results/trace_sample.jsonl,
 # which trace_report.py --validate then schema-checks (every event: ts,
-# kind from the documented enum, step and/or rid).
+# kind from the documented enum, step and/or rid) and renders with the
+# SLO + profile sections, failing on any empty one.  The slo benchmark
+# asserts the full observatory (per-tenant SLO monitor + step profiler +
+# recompile tracker) stays within the same 5% budget, bit-identical,
+# with zero post-warm recompilations.
 # Usage: scripts/ci.sh [extra pytest args]
 # CI runs the full suite (including the slow-marked interleaved
 # scheduler stress sweep); pass `-m "not slow"` for the quick tier.
@@ -23,6 +27,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.prefix_cache
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.paged_attention
 # --check exits nonzero on a FAILED row or an unhealthy BENCH_*.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
-    --only batched_prefill,interleaved,tracing --check
-# trace JSONL schema gate on the sample the tracing benchmark just wrote
-python scripts/trace_report.py --validate results/trace_sample.jsonl
+    --only batched_prefill,interleaved,tracing,slo --check
+# trace JSONL schema + report gate on the sample the tracing benchmark
+# just wrote: every event validates AND no report section (including the
+# requested SLO/profile ones) is empty
+python scripts/trace_report.py --slo --profile --validate \
+    results/trace_sample.jsonl

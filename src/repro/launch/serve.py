@@ -69,6 +69,25 @@ def main(argv=None):
                     help="per-replica prefix-store KV blocks (0 disables)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="open every prompt with this many shared tokens")
+    ap.add_argument("--tenant", action="append", default=None,
+                    metavar="NAME",
+                    help="tenant label(s); repeat or comma-separate — "
+                         "requests are assigned round-robin and get "
+                         "per-tenant SLO percentiles (default: 'default')")
+    ap.add_argument("--slo-config", default=None, metavar="PATH",
+                    help="JSON SLO policy file: {\"default\": {...}, "
+                         "\"tenants\": {name: {...}}} with thresholds "
+                         "like ttft_p95_ms / gap_p95_ms; breaches land "
+                         "in the trace as slo_breach events")
+    ap.add_argument("--profile", action="store_true",
+                    help="device-accurate step-phase timing "
+                         "(block_until_ready-bracketed) + paged-kernel "
+                         "cost/roofline profiles + recompile telemetry")
+    ap.add_argument("--metrics-interval-steps", type=int, default=None,
+                    metavar="N",
+                    help="with --metrics-out: atomically re-write the "
+                         "totals snapshot every N scheduler steps, so a "
+                         "killed capsule leaves a readable last snapshot")
     args = ap.parse_args(argv)
 
     import jax
@@ -77,11 +96,15 @@ def main(argv=None):
     from repro.configs import get_config, get_smoke_config
     from repro.models import transformer as T
     from repro.serving import (ReplicaGateway, Request, SamplingParams,
-                               ServingEngine)
+                               ServingEngine, SLOConfig, atomic_write_json)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encdec":
         raise SystemExit("serve launcher targets decoder LMs")
+    tenants = [t for arg in (args.tenant or ["default"])
+               for t in arg.split(",") if t]
+    slo_config = (SLOConfig.from_json(args.slo_config)
+                  if args.slo_config else None)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     engines = [ServingEngine(cfg, params, max_seq_len=args.max_seq_len,
                              max_slots=args.max_slots, rng_seed=r,
@@ -92,7 +115,8 @@ def main(argv=None):
     gateway = ReplicaGateway.from_engines(
         engines, prefill_token_budget=args.prefill_token_budget,
         tracing=args.trace_out is not None,
-        trace_buffer_events=args.trace_buffer_events)
+        trace_buffer_events=args.trace_buffer_events,
+        slo_config=slo_config, profile=args.profile)
     print(f"run config: arch={cfg.name} replicas={args.replicas} "
           f"max_slots={args.max_slots} max_seq_len={args.max_seq_len} "
           f"paged={args.paged} num_blocks={args.num_blocks} "
@@ -110,9 +134,22 @@ def main(argv=None):
                                      int(rng.integers(4, 12)),
                                      dtype=np.int32)]),
         SamplingParams(max_new_tokens=args.max_new, greedy=args.greedy,
-                       temperature=args.temperature)))
-        for _ in range(args.requests)]
-    gateway.drain()
+                       temperature=args.temperature),
+        tenant=tenants[i % len(tenants)]))
+        for i in range(args.requests)]
+    # drain manually so periodic snapshots can flush mid-run: a killed
+    # capsule then leaves the last atomic snapshot, not nothing
+    gateway.draining = True
+    for rep in gateway.replicas:
+        rep.scheduler.draining = True
+    steps = 0
+    while gateway.has_work:
+        gateway.step()
+        steps += 1
+        if (args.metrics_out and args.metrics_interval_steps
+                and steps % args.metrics_interval_steps == 0):
+            atomic_write_json(args.metrics_out,
+                              gateway.stats()["totals"])
 
     for i, h in enumerate(handles):
         rep = gateway.replicas[h[0]]
@@ -136,15 +173,46 @@ def main(argv=None):
         print(f"prefix cache: hit rate {pc['hit_rate']:.2f}, "
               f"{pc['cached_tokens_served']}/{pc['prompt_tokens']} prompt "
               f"tokens served from cache, {pc['evictions']} evictions")
+    if len(tenants) > 1 or tenants != ["default"]:
+        for name, ts in sorted(tot.get("tenants", {}).items()):
+            print(f"tenant {name}: {ts['requests_completed']} requests, "
+                  f"{ts['tokens_per_s']:.1f} tok/s, "
+                  f"ttft p95 {ts['ttft_ms']['p95']:.1f} ms, "
+                  f"gap p95 {ts['decode_gap_ms']['p95']:.2f} ms, "
+                  f"queue wait p95 {ts['queue_wait_ms']['p95']:.2f} ms")
+    if slo_config is not None:
+        for rep in gateway.replicas:
+            mon = rep.scheduler.tracer.slo
+            s = mon.summary()
+            print(f"SLO [{rep.name}]: {s['breaches']} breach(es), "
+                  f"active: {s['active'] or 'none'}")
+    if args.profile:
+        for rep in gateway.replicas:
+            ps = rep.scheduler.profiler.summary()
+            phases = "  ".join(
+                f"{p} p95 {ps[f'{p}_ms']['p95']:.2f}ms"
+                for p in ("admit", "prefill", "decode", "sample"))
+            print(f"profile [{rep.name}]: {ps['steps']} steps  {phases}")
+            rs = rep.scheduler.engine.recompiles.summary()
+            print(f"recompiles [{rep.name}]: {rs['compiles_total']} "
+                  f"compilations, {rs['post_warm_recompiles']} post-warm, "
+                  f"churning: {rs['churning'] or 'none'}")
+        if args.paged:
+            from repro.serving import profile_paged_kernels
+            for name, prof in profile_paged_kernels(
+                    gateway.replicas[0].scheduler.engine).items():
+                print(f"kernel {name}: {prof['wall_ms_median']:.2f} ms, "
+                      f"{prof['flops']:.3g} flops, "
+                      f"{prof['achieved_tflops']:.3f} TFLOP/s "
+                      f"({prof['fraction_of_peak_flops']:.1%} of peak), "
+                      f"{prof['achieved_gbps']:.1f} GB/s "
+                      f"({prof['fraction_of_peak_bw']:.1%} of HBM)")
     if args.metrics_json:
         with open(args.metrics_json, "w") as f:
             json.dump(stats, f, indent=2, sort_keys=True, default=str)
         print(f"metrics -> {args.metrics_json}")
     if args.metrics_out:
-        out = Path(args.metrics_out)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(stats["totals"], indent=2, sort_keys=True,
-                                  default=str) + "\n")
+        out = atomic_write_json(args.metrics_out, stats["totals"])
         print(f"merged metrics summary -> {out}")
     if args.trace_out:
         jsonl = gateway.export_trace_jsonl(f"{args.trace_out}.jsonl")

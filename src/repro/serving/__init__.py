@@ -3,9 +3,16 @@ from repro.serving.engine import (PrefillCursor, Request, SamplingParams,
 from repro.serving.gateway import (CapsuleReplica, ReplicaGateway,
                                    launch_capsule_replicas)
 from repro.serving.kvcache import KVBlockPool, OutOfBlocks, PagedKVCache
-from repro.serving.metrics import ServingMetrics, merge_summaries
+from repro.serving.metrics import (ServingMetrics, atomic_write_json,
+                                   merge_summaries)
 from repro.serving.prefix_cache import PrefixCache, PrefixCacheStats
+from repro.serving.profiling import (RecompilationTracker, StepProfiler,
+                                     profile_kernel, profile_paged_kernels)
 from repro.serving.scheduler import Scheduler
+from repro.serving.slo import (SLOConfig, SLOMonitor, SLOPolicy,
+                               SlidingWindow, TenantStats,
+                               merge_tenant_summaries,
+                               merge_window_summaries)
 from repro.serving.tracing import (EVENT_KINDS, Tracer, export_chrome_trace,
                                    export_jsonl, merge_traces,
                                    to_chrome_trace, validate_event)

@@ -82,6 +82,9 @@ class Request:
     # enc-dec (whisper): precomputed frame embeddings (enc_seq, d_model);
     # the engine runs the encoder once at prefill
     encoder_input: Optional[np.ndarray] = None
+    # SLO tenant label: threaded submit -> scheduler -> metrics so
+    # mixed-SLA traffic gets per-tenant percentiles (serving/slo.py)
+    tenant: str = "default"
 
 
 @dataclass
@@ -185,6 +188,11 @@ class ServingEngine:
         # replica); None until then — engine-side trace emission is
         # guarded so direct primitive use stays untraced
         self.tracer = None
+        # jit recompilation telemetry: each compiled program's argument
+        # shape signature is reported per call; post-warm novelty is the
+        # variable-batch shape-churn bug (serving/profiling.py)
+        from repro.serving.profiling import RecompilationTracker
+        self.recompiles = RecompilationTracker()
         self._inflight: Dict[int, PrefillCursor] = {}   # slot -> cursor
         self._begin_seq = 0                  # FIFO stamp for cursors
         self._step = jax.jit(make_serve_step(cfg))
@@ -433,6 +441,9 @@ class ServingEngine:
                         toks[r, :ql] = cur.tokens[cur.pos:cur.pos + ql]
                         starts[r] = cur.pos
                         qlens[r] = ql
+                    self.recompiles.observe(
+                        "prefill_paged", (toks.shape, tables.shape),
+                        tracer=tr)
                     logits, self.kv.cache = self._prefill_paged(
                         self.params, jnp.asarray(toks), jnp.asarray(starts),
                         jnp.asarray(qlens), self.kv.cache,
@@ -463,6 +474,8 @@ class ServingEngine:
                         ql = min(cur.remaining, C)
                         chunk = np.zeros(C, np.int32)
                         chunk[:ql] = cur.tokens[cur.pos:cur.pos + ql]
+                        self.recompiles.observe(
+                            "prefill_chunk", (1, C), tracer=tr)
                         cur.dense_cache, logits = self._prefill_chunk(
                             self.params, jnp.asarray(chunk)[None],
                             cur.dense_cache,
@@ -533,6 +546,9 @@ class ServingEngine:
                 mask_slots=self._inflight)
         if self._enc_pool is not None:
             batch["encoder_output"] = self._enc_pool
+        self.recompiles.observe(
+            "decode_step", (np.shape(tokens), np.shape(positions)),
+            tracer=self.tracer)
         logits, self.kv.cache = self._step(self.params, batch)
         self.decode_steps += 1
         return logits[:, 0]                  # device-resident; no sync here
@@ -542,6 +558,8 @@ class ServingEngine:
         """Per-row sampling: row i uses temps[i] / greedy[i].  Rows whose
         temperature is below 1e-4 (including exactly 0.0) sample greedily."""
         self.key, sub = jax.random.split(self.key)
+        self.recompiles.observe("sample", np.shape(logits),
+                                tracer=self.tracer)
         return np.asarray(self._sample_vec(
             sub, jnp.asarray(logits), jnp.asarray(temps, jnp.float32),
             jnp.asarray(greedy)))

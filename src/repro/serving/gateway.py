@@ -68,18 +68,25 @@ class ReplicaGateway:
     def from_engines(cls, engines: List[ServingEngine], *,
                      affinity_slack: int = 2, tracing: bool = False,
                      trace_buffer_events: Optional[int] = None,
+                     slo_config=None,
                      **sched_kw) -> "ReplicaGateway":
         """``tracing=True`` gives every replica an enabled
         :class:`~repro.serving.tracing.Tracer` (ring depth
         ``trace_buffer_events``) on the shared process clock, so
         :meth:`trace_events` can interleave the fleet's buffers into one
-        timeline."""
+        timeline.  ``slo_config`` (an
+        :class:`~repro.serving.slo.SLOConfig`) arms every replica's
+        tracer with its own :class:`~repro.serving.slo.SLOMonitor` —
+        breach state is per replica, the policies are shared."""
         def sched(i, e):
             kw = dict(sched_kw)
             if "tracer" not in kw:
                 tkw = {"enabled": tracing, "name": f"replica{i}"}
                 if trace_buffer_events is not None:
                     tkw["buffer_events"] = trace_buffer_events
+                if slo_config is not None:
+                    from repro.serving.slo import SLOMonitor
+                    tkw["slo"] = SLOMonitor(slo_config)
                 kw["tracer"] = Tracer(**tkw)
             return Scheduler(e, **kw)
 
@@ -166,9 +173,20 @@ class ReplicaGateway:
 
     def stats(self) -> Dict[str, Any]:
         summaries = [rep.scheduler.metrics.summary() for rep in self.replicas]
-        per = {rep.name: {**s, "routed": rep.routed, "capsule": rep.capsule}
-               for rep, s in zip(self.replicas, summaries)}
-        return {"replicas": per, "totals": merge_summaries(summaries)}
+        per = {}
+        for rep, s in zip(self.replicas, summaries):
+            entry = {**s, "routed": rep.routed, "capsule": rep.capsule}
+            if rep.scheduler.tracer.slo is not None:
+                entry["slo"] = rep.scheduler.tracer.slo.summary()
+            if rep.scheduler.profiler is not None:
+                entry["profile"] = rep.scheduler.profiler.summary()
+            per[rep.name] = entry
+        totals = merge_summaries(summaries)
+        breaches = sum(p["slo"]["breaches"] for p in per.values()
+                       if "slo" in p)
+        if any("slo" in p for p in per.values()):
+            totals["slo_breaches"] = breaches
+        return {"replicas": per, "totals": totals}
 
     # -- tracing -------------------------------------------------------------
 

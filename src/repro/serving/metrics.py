@@ -5,13 +5,36 @@ as JSON for the benchmark harness (``BENCH_serving.json``).  Latency
 percentiles are computed over completed requests; gauge series (queue
 depth, slot occupancy) are sampled once per scheduler step.  The clock is
 injectable so tests can drive deterministic timings.
+
+Memory is bounded for month-long deployments (the source paper's
+deploy-and-run setting): per-request timing entries are kept for every
+*in-flight* request plus the most recent ``sample_cap`` finished ones
+(older finished entries are evicted FIFO), and every percentile series
+lives in a :class:`~repro.serving.slo.SlidingWindow` ring.  Totals —
+request counts, token counts, finish reasons, gauge means/peaks — are
+running scalars and stay exact forever.  Below the cap nothing is ever
+evicted, so small runs (every test, every benchmark) see byte-identical
+numbers to the unbounded implementation.
+
+Per-tenant rollups: each request carries a tenant label (threaded from
+``Request.tenant`` through ``Tracer.submit``); TTFT, inter-token gap and
+queue-wait land in that tenant's :class:`~repro.serving.slo.TenantStats`
+windows, surfaced under ``summary()["tenants"]`` and merged across
+replicas by :func:`merge_summaries`.
 """
 from __future__ import annotations
 
 import json
+import os
 import time
+from collections import deque
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional
+
+from repro.serving.slo import (SlidingWindow, TenantStats,
+                               merge_tenant_summaries)
+
+DEFAULT_SAMPLE_CAP = 4096
 
 
 def _pct(xs: List[float], q: float) -> float:
@@ -27,20 +50,54 @@ def _pct(xs: List[float], q: float) -> float:
     return s[lo] + (s[hi] - s[lo]) * (f - lo)
 
 
+def atomic_write_json(path, obj: dict) -> Path:
+    """Write JSON via a same-directory temp file + ``os.replace`` so a
+    capsule killed mid-write leaves the previous snapshot readable, never
+    a truncated file (``--metrics-interval-steps`` relies on this)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(obj, indent=2, sort_keys=True,
+                              default=str) + "\n")
+    os.replace(tmp, path)
+    return path
+
+
 class ServingMetrics:
     """Per-request timings + per-step gauges for one scheduler."""
 
-    def __init__(self, clock=time.perf_counter):
+    def __init__(self, clock=time.perf_counter,
+                 sample_cap: int = DEFAULT_SAMPLE_CAP,
+                 tenant_window: int = 512):
+        if sample_cap <= 0:
+            raise ValueError(f"sample_cap must be positive, got {sample_cap}")
         self.clock = clock
+        self.sample_cap = sample_cap
+        self.tenant_window = tenant_window
+        # per-request timing dicts: all in-flight rids + the most recent
+        # ``sample_cap`` finished ones (FIFO eviction of older finished
+        # entries — callers may index recently finished rids directly,
+        # e.g. examples/serve_lm.py computes per-request TTFT post-run)
         self._submit: Dict[int, float] = {}
         self._first: Dict[int, float] = {}
         self._finish: Dict[int, float] = {}
         self._tokens: Dict[int, int] = {}
         self._reasons: Dict[int, str] = {}
-        self.queue_depth: List[int] = []
-        self.active_slots: List[int] = []
+        self._finished_order: deque = deque()
+        # running totals (exact, never evicted)
+        self.requests_submitted = 0
+        self.requests_completed = 0
+        self.total_new_tokens = 0
+        self.finish_reason_counts: Dict[str, int] = {}
+        self._first_submit_ts: Optional[float] = None
+        self._last_finish_ts: Optional[float] = None
+        # gauges: running aggregates (exact) — sampled on decode steps
         self.max_slots: int = 0
         self.decode_steps: int = 0
+        self._queue_sum = 0
+        self._queue_samples = 0
+        self._queue_peak = 0
+        self._occ_sum = 0
         # prefix cache (zero everywhere when the cache is disabled)
         self.prefix_hits: int = 0
         self.prefix_misses: int = 0
@@ -53,29 +110,108 @@ class ServingMetrics:
         # folded into the FLOPs proxy
         self.prefill_tokens_real: int = 0
         self.prefill_tokens_executed: int = 0
-        # decode-step latency jitter: timestamp of every decode step;
-        # the gaps between consecutive steps are the inter-token
-        # latencies every running sequence experiences — the number
-        # SplitFuse-style interleaving exists to bound
-        self.decode_step_times: List[float] = []
+        # decode-step latency jitter: gaps between consecutive decode
+        # steps — the inter-token latencies every running sequence
+        # experiences, the number SplitFuse-style interleaving exists to
+        # bound.  Stored in seconds; count/mean/max are all-time.
+        self.decode_gaps = SlidingWindow(sample_cap)
+        self._last_step_ts: Optional[float] = None
+        # queue wait (submit -> first admit), ms
+        self.queue_wait_ms = SlidingWindow(sample_cap)
         # prefill-budget accounting (interleaved scheduling): per
         # budgeted round, executed tokens vs the configured budget
         self.budget_rounds: int = 0
         self.budget_tokens_executed: int = 0
         self.budget_tokens_cap: int = 0
+        # per-tenant rollups
+        self.tenants: Dict[str, TenantStats] = {}
+        self._tenant_of: Dict[int, str] = {}      # in-flight rids only
+        self._admitted: set = set()               # rids past first admit
+        self._last_tok_ts: Dict[int, float] = {}  # in-flight decode rows
 
     # -- recording -----------------------------------------------------------
 
-    def record_submit(self, rid: int) -> None:
-        self._submit[rid] = self.clock()
+    def _tenant(self, tenant: str) -> TenantStats:
+        ts = self.tenants.get(tenant)
+        if ts is None:
+            ts = self.tenants[tenant] = TenantStats(self.tenant_window)
+        return ts
+
+    def record_submit(self, rid: int, tenant: str = "default") -> None:
+        now = self.clock()
+        self._submit[rid] = now
+        self.requests_submitted += 1
+        if self._first_submit_ts is None or now < self._first_submit_ts:
+            self._first_submit_ts = now
+        self._tenant_of[rid] = tenant
+        t = self._tenant(tenant)
+        t.submitted += 1
+        if t.first_submit_ts is None or now < t.first_submit_ts:
+            t.first_submit_ts = now
+
+    def record_admit(self, rid: int) -> None:
+        """First admission of ``rid``: queue wait = submit -> now.  A
+        re-admit after preemption is not a queue wait and is ignored."""
+        if rid in self._admitted or rid not in self._submit:
+            return
+        self._admitted.add(rid)
+        wait_ms = (self.clock() - self._submit[rid]) * 1e3
+        self.queue_wait_ms.add(wait_ms)
+        tenant = self._tenant_of.get(rid)
+        if tenant is not None:
+            self._tenant(tenant).queue_wait_ms.add(wait_ms)
 
     def record_first_token(self, rid: int) -> None:
-        self._first[rid] = self.clock()
+        now = self.clock()
+        self._first[rid] = now
+        self._last_tok_ts[rid] = now
+        sub = self._submit.get(rid)
+        tenant = self._tenant_of.get(rid)
+        if sub is not None and tenant is not None:
+            self._tenant(tenant).ttft_ms.add((now - sub) * 1e3)
+
+    def record_decode_tokens(self, rids: Iterable[int]) -> None:
+        """One decode step emitted a token for each of ``rids``: record
+        the per-request inter-token gap into its tenant's window."""
+        now = self.clock()
+        for rid in rids:
+            last = self._last_tok_ts.get(rid)
+            self._last_tok_ts[rid] = now
+            if last is None:
+                continue
+            tenant = self._tenant_of.get(rid)
+            if tenant is not None:
+                self._tenant(tenant).gap_ms.add((now - last) * 1e3)
 
     def record_finish(self, rid: int, n_tokens: int, reason: str) -> None:
-        self._finish[rid] = self.clock()
+        now = self.clock()
+        first_finish = rid not in self._finish
+        self._finish[rid] = now
         self._tokens[rid] = n_tokens
         self._reasons[rid] = reason
+        if not first_finish:
+            return
+        self._finished_order.append(rid)
+        self.requests_completed += 1
+        self.total_new_tokens += n_tokens
+        self.finish_reason_counts[reason] = (
+            self.finish_reason_counts.get(reason, 0) + 1)
+        if self._last_finish_ts is None or now > self._last_finish_ts:
+            self._last_finish_ts = now
+        tenant = self._tenant_of.pop(rid, None)
+        if tenant is not None:
+            t = self._tenant(tenant)
+            t.completed += 1
+            t.new_tokens += n_tokens
+            if t.last_finish_ts is None or now > t.last_finish_ts:
+                t.last_finish_ts = now
+        self._admitted.discard(rid)
+        self._last_tok_ts.pop(rid, None)
+        while len(self._finished_order) > self.sample_cap:
+            old = self._finished_order.popleft()
+            for d in (self._submit, self._first, self._finish,
+                      self._tokens, self._reasons):
+                d.pop(old, None)
 
     def record_prefix(self, cached_tokens: int, prompt_tokens: int) -> None:
         """One admission's prefix-cache outcome: how many of the prompt's
@@ -104,11 +240,17 @@ class ServingMetrics:
 
     def sample_gauges(self, queue_depth: int, active: int,
                       max_slots: int) -> None:
-        self.queue_depth.append(queue_depth)
-        self.active_slots.append(active)
+        self._queue_sum += queue_depth
+        self._queue_samples += 1
+        if queue_depth > self._queue_peak:
+            self._queue_peak = queue_depth
+        self._occ_sum += active
         self.max_slots = max_slots
         self.decode_steps += 1
-        self.decode_step_times.append(self.clock())
+        now = self.clock()
+        if self._last_step_ts is not None:
+            self.decode_gaps.add(now - self._last_step_ts)
+        self._last_step_ts = now
 
     # -- reduction -----------------------------------------------------------
 
@@ -121,27 +263,25 @@ class ServingMetrics:
                 if r in self._submit]
 
     def decode_gaps_s(self) -> List[float]:
-        """Inter-token gaps: time between consecutive decode steps.  An
+        """Inter-token gaps: time between consecutive decode steps (the
+        windowed ring — all-time count/max live on ``decode_gaps``).  An
         admission wave's prefill runs between two decode steps, so a
         wave-at-once stall shows up as one huge gap here."""
-        t = self.decode_step_times
-        return [b - a for a, b in zip(t, t[1:])]
+        return list(self.decode_gaps.ring)
 
     def summary(self) -> Dict[str, object]:
         ttft, lat = self.ttft_s(), self.latency_s()
-        total_tokens = sum(self._tokens.values())
-        span = ((max(self._finish.values()) - min(self._submit.values()))
-                if self._finish and self._submit else 0.0)
-        occ = (sum(self.active_slots) / (len(self.active_slots)
-                                         * max(self.max_slots, 1))
-               if self.active_slots else 0.0)
-        reasons: Dict[str, int] = {}
-        for r in self._reasons.values():
-            reasons[r] = reasons.get(r, 0) + 1
+        span = ((self._last_finish_ts - self._first_submit_ts)
+                if self._last_finish_ts is not None
+                and self._first_submit_ts is not None else 0.0)
+        occ = (self._occ_sum / (self._queue_samples
+                                * max(self.max_slots, 1))
+               if self._queue_samples else 0.0)
         return {
-            "requests_completed": len(self._finish),
-            "total_new_tokens": total_tokens,
-            "tokens_per_s": total_tokens / span if span > 0 else 0.0,
+            "requests_completed": self.requests_completed,
+            "total_new_tokens": self.total_new_tokens,
+            "tokens_per_s": (self.total_new_tokens / span
+                             if span > 0 else 0.0),
             "decode_steps": self.decode_steps,
             "ttft_ms": {"p50": _pct(ttft, 0.5) * 1e3,
                         "p95": _pct(ttft, 0.95) * 1e3,
@@ -149,12 +289,12 @@ class ServingMetrics:
                                  if ttft else 0.0)},
             "latency_ms": {"p50": _pct(lat, 0.5) * 1e3,
                            "p95": _pct(lat, 0.95) * 1e3},
-            "queue_depth": {"mean": (sum(self.queue_depth)
-                                     / len(self.queue_depth)
-                                     if self.queue_depth else 0.0),
-                            "peak": max(self.queue_depth, default=0)},
+            "queue_depth": {"mean": (self._queue_sum / self._queue_samples
+                                     if self._queue_samples else 0.0),
+                            "peak": self._queue_peak},
+            "queue_wait_ms": self.queue_wait_ms.summary(),
             "slot_occupancy": occ,
-            "finish_reasons": reasons,
+            "finish_reasons": dict(self.finish_reason_counts),
             "prefill_tokens": {
                 "real": self.prefill_tokens_real,
                 "executed": self.prefill_tokens_executed,
@@ -182,16 +322,18 @@ class ServingMetrics:
                                           / max(self.prompt_tokens, 1)),
                 "evictions": self.prefix_evictions,
             },
+            "tenants": {name: t.summary()
+                        for name, t in sorted(self.tenants.items())},
         }
 
     def _decode_gap_summary(self) -> Dict[str, float]:
-        gaps = self.decode_gaps_s()
+        g = self.decode_gaps
         return {
-            "p50": _pct(gaps, 0.5) * 1e3,
-            "p95": _pct(gaps, 0.95) * 1e3,
-            "max": max(gaps, default=0.0) * 1e3,
-            "mean": sum(gaps) / len(gaps) * 1e3 if gaps else 0.0,
-            "count": len(gaps),
+            "p50": g.percentile(0.5) * 1e3,
+            "p95": g.percentile(0.95) * 1e3,
+            "max": g.peak * 1e3,
+            "mean": g.mean * 1e3 if g.count else 0.0,
+            "count": g.count,
         }
 
     def to_json(self, **extra) -> str:
@@ -199,9 +341,7 @@ class ServingMetrics:
                           sort_keys=True)
 
     def export(self, path, **extra) -> Path:
-        path = Path(path)
-        path.write_text(self.to_json(**extra) + "\n")
-        return path
+        return atomic_write_json(path, {**self.summary(), **extra})
 
 
 def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
@@ -279,4 +419,10 @@ def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
                                for s in summaries), default=0.0),
         "slot_occupancy": (sum(s.get("slot_occupancy", 0.0)
                                for s in summaries) / len(summaries)),
+        # per-tenant rollups: tenants union across replicas (disjoint
+        # keys pass through); overlapping tenants merge window-wise —
+        # zero-count windows (an idle or zero-decode replica) contribute
+        # nothing, extending the jitter-dilution regression to tenants
+        "tenants": merge_tenant_summaries(
+            [s.get("tenants", {}) for s in summaries]),
     }

@@ -77,6 +77,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
 from repro.serving.engine import Request, ServingEngine
@@ -109,7 +110,8 @@ class Scheduler:
                  clock=time.perf_counter,
                  max_admissions_per_step: Optional[int] = None,
                  prefill_token_budget: Optional[int] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 profile: bool = False):
         self.engine = engine
         self.max_slots = engine.max_slots
         # cap on requests admitted per scheduler step (None = drain all
@@ -140,6 +142,15 @@ class Scheduler:
         engine.kv.tracer = tracer
         if engine.prefix_cache is not None:
             engine.prefix_cache.tracer = tracer
+        # step-phase profiling: with profile=True each phase is
+        # bracketed by block_until_ready so the t0..t4 deltas measure
+        # device time, not dispatch time (JAX is async); the windows
+        # live on self.profiler.  Off by default — the sync points
+        # serialize the pipeline and cost real throughput.
+        self.profiler = None
+        if profile:
+            from repro.serving.profiling import StepProfiler
+            self.profiler = StepProfiler()
         self.queue: deque = deque()
         self.active: Dict[int, _ReqState] = {}          # slot -> state
         self.prefilling: Dict[int, _ReqState] = {}      # slot -> mid-prefill
@@ -186,7 +197,7 @@ class Scheduler:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(_ReqState(rid, request))
-        self.tracer.submit(rid)
+        self.tracer.submit(rid, request.tenant)
         return rid
 
     @property
@@ -500,6 +511,9 @@ class Scheduler:
             inflight=len(self.prefilling),
             prefix_pins=(kv.prefix_pool.in_use
                          if kv.prefix_pool is not None else 0))
+        if self.profiler is not None:
+            self.profiler.record_step(t1 - t0, t2 - t1, t3 - t2, t4 - t3)
+        tr.check_slo()
 
     def step(self) -> bool:
         """One token-budgeted round: admit into free slots, run at most
@@ -512,11 +526,16 @@ class Scheduler:
         sample+retire) and a gauges snapshot, so a stalled request can
         be read against what the engine was actually doing that step."""
         tr = self.tracer
+        prof = self.profiler
         t0 = tr.clock()
         admitted = self._admit()
+        if prof is not None:                 # device-accurate phase edges
+            jax.block_until_ready(self.engine.kv.cache)
         t1 = tr.clock()
         exec0 = self.engine.prefill_tokens_executed
         completed = self._advance_prefill()
+        if prof is not None:
+            jax.block_until_ready(self.engine.kv.cache)
         executed = self.engine.prefill_tokens_executed - exec0
         t2 = tr.clock()
         if not self.active:
@@ -552,8 +571,13 @@ class Scheduler:
             temps[slot] = st.request.params.temperature
             greedy[slot] = st.request.params.greedy
         logits = self.engine.decode_once(tokens, positions)
+        if prof is not None:
+            jax.block_until_ready(logits)
         t3 = tr.clock()
         toks = self.engine.sample_tokens(logits, temps, greedy)
+        # per-tenant inter-token gaps: record before retirement pops the
+        # rows' last-token timestamps
+        tr.decode_tokens([st.rid for st in self.active.values()])
         for slot in list(self.active):
             st = self.active[slot]
             st.pos += 1

@@ -68,6 +68,7 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence
 
 from repro.serving.metrics import ServingMetrics
+from repro.serving.slo import SLOMonitor
 
 # The documented event enum.  ``scripts/trace_report.py --validate``
 # imports this set: an event whose ``kind`` is not listed here fails the
@@ -94,6 +95,9 @@ EVENT_KINDS = frozenset({
     "prefix_evict",      # LRU eviction freed blocks/nodes
     # engine timeline
     "engine_step",       # one Scheduler.step(): phases + gauges
+    # observatory (PR 7): SLO + compilation telemetry
+    "slo_breach",        # a tenant's policy check changed state
+    "recompile",         # a jitted program saw a novel shape signature
 })
 
 # kinds that must carry a request id (the rest are step-scoped;
@@ -122,11 +126,13 @@ class Tracer:
     def __init__(self, metrics: Optional[ServingMetrics] = None, *,
                  enabled: bool = False,
                  buffer_events: int = DEFAULT_BUFFER_EVENTS,
-                 clock=time.perf_counter, name: str = "replica0"):
+                 clock=time.perf_counter, name: str = "replica0",
+                 slo: Optional[SLOMonitor] = None):
         if buffer_events <= 0:
             raise ValueError(
                 f"buffer_events must be positive, got {buffer_events}")
         self.metrics = metrics or ServingMetrics(clock=clock)
+        self.slo = slo
         self.enabled = enabled
         self.clock = clock
         self.name = name
@@ -163,10 +169,10 @@ class Tracer:
 
     # -- request lifecycle (metrics-feeding sites first) ---------------------
 
-    def submit(self, rid: int) -> None:
-        self.metrics.record_submit(rid)
+    def submit(self, rid: int, tenant: str = "default") -> None:
+        self.metrics.record_submit(rid, tenant)
         if self.enabled:
-            self._emit("submit", rid)
+            self._emit("submit", rid, tenant=tenant)
 
     def first_token(self, rid: int) -> None:
         self.metrics.record_first_token(rid)
@@ -195,6 +201,26 @@ class Tracer:
     def budget_round(self, executed: int, budget: int) -> None:
         self.metrics.record_budget(executed, budget)
 
+    def decode_tokens(self, rids) -> None:
+        """One decode step emitted tokens for ``rids`` (per-tenant
+        inter-token gap recording; metrics-only, no event)."""
+        self.metrics.record_decode_tokens(rids)
+
+    def check_slo(self) -> None:
+        """Evaluate SLO policies against current per-tenant stats and
+        emit one ``slo_breach`` event per state transition (enter-breach
+        or recover).  Cheap when nothing changed; no-op without a
+        monitor.  Breach totals accumulate on the monitor even when the
+        tracer is disabled — policy accounting is not trace-gated."""
+        if self.slo is None:
+            return
+        for t in self.slo.evaluate(self.metrics.tenants):
+            if self.enabled:
+                self._emit("slo_breach", tenant=t["tenant"],
+                           metric=t["metric"], observed=t["observed"],
+                           threshold=t["threshold"],
+                           recovered=t["recovered"])
+
     # -- trace-only events ---------------------------------------------------
 
     def route(self, rid: int, replica: str, reason: str, match_len: int,
@@ -205,6 +231,9 @@ class Tracer:
 
     def admit(self, rid: int, slot: int, seq_len: int, cached_len: int,
               resumed: bool) -> None:
+        # queue wait (submit -> first admit) per request/tenant; the
+        # metrics ignore re-admits after preemption
+        self.metrics.record_admit(rid)
         if self.enabled:
             self._emit("admit", rid, slot=slot, seq_len=seq_len,
                        cached_len=cached_len, resumed=resumed)
@@ -263,6 +292,17 @@ class Tracer:
     def prefix_evict(self, blocks: int, nodes: int) -> None:
         if self.enabled:
             self._emit("prefix_evict", blocks=blocks, nodes=nodes)
+
+    # -- compilation telemetry -----------------------------------------------
+
+    def recompile(self, program: str, signature: str, compiles: int,
+                  post_warm: bool) -> None:
+        """A jitted program compiled a novel shape signature beyond its
+        first (or any signature after warmup) — the shape-churn warning
+        :class:`~repro.serving.profiling.RecompilationTracker` raises."""
+        if self.enabled:
+            self._emit("recompile", program=program, signature=signature,
+                       compiles=compiles, post_warm=post_warm)
 
     # -- engine timeline -----------------------------------------------------
 
@@ -382,6 +422,15 @@ def to_chrome_trace(events_by_replica: Mapping[str, Sequence[Mapping]]
                             "args": args})
             out.append({**base, "ph": "e", "ts": us(revs[-1]["ts"])})
         for ev in evs:
+            if ev["kind"] in ("slo_breach", "recompile"):
+                # step-scoped warnings: instants on the engine thread so
+                # they line up with the phase slices they interrupt
+                out.append({"ph": "i", "s": "t", "cat": "observatory",
+                            "name": ev["kind"], "pid": pid, "tid": 1,
+                            "ts": us(ev["ts"]),
+                            "args": {k: v for k, v in ev.items()
+                                     if k != "ts"}})
+                continue
             if ev["kind"] != "engine_step":
                 continue
             end = ev["ts"]
