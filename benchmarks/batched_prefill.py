@@ -27,7 +27,6 @@ Four runs over the same request stream, written to
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 
@@ -147,8 +146,10 @@ def run(quick: bool = True, out_path: str = "BENCH_batched_prefill.json"):
         "ttft_speedup": speedup,
         "bit_identical_outputs": True,
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True, default=str)
+    # atomic (tmp + os.replace): a benchmark killed mid-write can never
+    # leave a truncated BENCH_*.json for run.py --check to choke on
+    from repro.serving.metrics import atomic_write_json
+    atomic_write_json(out_path, record)
 
     rows = [
         ("batched_prefill/serial", serial_wall * 1e6,

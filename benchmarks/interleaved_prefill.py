@@ -29,7 +29,6 @@ bursts of 8 long prompts arriving at fixed step offsets), written to
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 N_LONG = 2
@@ -176,8 +175,10 @@ def run(quick: bool = True, out_path: str = "BENCH_interleaved.json"):
         "bit_identical_outputs": True,
     }
     record["dense"].pop("wall_s")                   # untimed oracle run
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True, default=str)
+    # atomic (tmp + os.replace): a benchmark killed mid-write can never
+    # leave a truncated BENCH_*.json for run.py --check to choke on
+    from repro.serving.metrics import atomic_write_json
+    atomic_write_json(out_path, record)
 
     wg, ig = wave_sum["decode_gap_ms"], inter_sum["decode_gap_ms"]
     rows = [

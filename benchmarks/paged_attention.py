@@ -25,7 +25,6 @@ Three measurements, written to ``BENCH_paged_attention.json``:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 
@@ -145,8 +144,10 @@ def run(quick: bool = True, out_path: str = "BENCH_paged_attention.json"):
                        "kv_bytes_resident": small_eng.kv.kv_bytes()},
         "bit_identical_outputs": True,
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True, default=str)
+    # atomic (tmp + os.replace): a benchmark killed mid-write can never
+    # leave a truncated BENCH_*.json for run.py --check to choke on
+    from repro.serving.metrics import atomic_write_json
+    atomic_write_json(out_path, record)
 
     rows = [
         ("paged_attention/dense", dense_wall * 1e6,

@@ -21,7 +21,6 @@ engines, and writes ``BENCH_prefix_cache.json``.
 from __future__ import annotations
 
 import argparse
-import json
 
 
 def _serve_sequentially(engine, prompts, max_new):
@@ -106,8 +105,10 @@ def run(quick: bool = True, out_path: str = "BENCH_prefix_cache.json"):
         "prefix_cache": pc,
         "cached_prefix_tokens_total": int(warm_eng.cached_prefix_tokens),
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True, default=str)
+    # atomic (tmp + os.replace): a benchmark killed mid-write can never
+    # leave a truncated BENCH_*.json for run.py --check to choke on
+    from repro.serving.metrics import atomic_write_json
+    atomic_write_json(out_path, record)
 
     rows = [
         ("prefix_cache/cold_ttft", cold_ttft_ms * 1e3,

@@ -119,6 +119,37 @@ def _check_bench_json() -> list:
             errors.append(f"{p}: no completed-request count found")
         elif max(counts) <= 0:
             errors.append(f"{p}: zero completed requests")
+        if p in ("BENCH_tracing.json", "BENCH_slo.json"):
+            errors.extend(_check_overhead_bound(p, data, dicts))
+    return errors
+
+
+def _check_overhead_bound(p: str, data, dicts) -> list:
+    """The tracing/observatory artifacts must *prove* their overhead
+    claim: enabled-vs-disabled walls, their ratio, and a bound no looser
+    than the documented 5% must all be present, with ratio <= bound.  A
+    benchmark that quietly stopped measuring the disabled baseline (or
+    relaxed its own budget) fails the build here, not in a review."""
+    fields = ("disabled_wall_s", "enabled_wall_s", "overhead_ratio",
+              "overhead_bound")
+    holders = [d for d in dicts(data)
+               if all(isinstance(d.get(k), (int, float)) for k in fields)]
+    if not holders:
+        missing = sorted({k for k in fields
+                          if not any(isinstance(d.get(k), (int, float))
+                                     for d in dicts(data))})
+        return [f"{p}: overhead-bound fields missing or non-numeric "
+                f"({', '.join(missing) or 'scattered across dicts'})"]
+    errors = []
+    for d in holders:
+        if d["overhead_bound"] > 1.05:
+            errors.append(f"{p}: overhead_bound {d['overhead_bound']} is "
+                          f"looser than the documented 5% budget (1.05)")
+        if d["overhead_ratio"] > d["overhead_bound"]:
+            errors.append(f"{p}: overhead_ratio {d['overhead_ratio']:.4f} "
+                          f"exceeds its bound {d['overhead_bound']}")
+        if min(d["disabled_wall_s"], d["enabled_wall_s"]) <= 0:
+            errors.append(f"{p}: non-positive wall-clock measurement")
     return errors
 
 
@@ -132,8 +163,10 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="after running, validate every BENCH_*.json in "
                          "the cwd (bit_identical_outputs true where "
-                         "present, nonzero completed requests) and exit "
-                         "nonzero on any failure")
+                         "present, nonzero completed requests, and the "
+                         "tracing/slo overhead ratio present and within "
+                         "its documented 5%% bound) and exit nonzero on "
+                         "any failure")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 

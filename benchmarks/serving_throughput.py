@@ -16,7 +16,6 @@ admissions.
 from __future__ import annotations
 
 import argparse
-import json
 
 
 def run(quick: bool = True, out_path: str = "BENCH_serving.json"):
@@ -59,8 +58,10 @@ def run(quick: bool = True, out_path: str = "BENCH_serving.json"):
 
     record = {"arch": arch, "quick": quick, "n_requests": n_requests,
               "max_slots_per_replica": max_slots, **stats}
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True, default=str)
+    # atomic (tmp + os.replace): a benchmark killed mid-write can never
+    # leave a truncated BENCH_*.json for run.py --check to choke on
+    from repro.serving.metrics import atomic_write_json
+    atomic_write_json(out_path, record)
 
     rows = [
         ("serving/tokens_per_s", 0.0,

@@ -39,7 +39,6 @@ for TPU-target kernels are context, not claims.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 from benchmarks.interleaved_prefill import (BURST_DEPTH, BURST_STEPS,
@@ -243,8 +242,10 @@ def run(quick: bool = True, out_path: str = "BENCH_slo.json"):
         "fleet_rollup": fleet,
         "breach_demo": breach,
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True, default=str)
+    # atomic (tmp + os.replace): a benchmark killed mid-write can never
+    # leave a truncated BENCH_*.json for run.py --check to choke on
+    from repro.serving.metrics import atomic_write_json
+    atomic_write_json(out_path, record)
 
     ta = on_sum["tenants"][TENANTS[0]]
     rows = [

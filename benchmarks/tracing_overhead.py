@@ -187,8 +187,10 @@ def run(quick: bool = True, out_path: str = "BENCH_tracing.json"):
         "bit_identical_outputs": True,
         "sample_trace": sample,
     }
-    with open(out_path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True, default=str)
+    # atomic (tmp + os.replace): a benchmark killed mid-write can never
+    # leave a truncated BENCH_*.json for run.py --check to choke on
+    from repro.serving.metrics import atomic_write_json
+    atomic_write_json(out_path, record)
 
     rows = [
         ("tracing_overhead/disabled", off_wall * 1e6,

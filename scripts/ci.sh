@@ -21,6 +21,11 @@
 # scheduler stress sweep); pass `-m "not slow"` for the quick tier.
 set -e
 cd "$(dirname "$0")/.."
+# static gate first: repro-lint (src/repro/analysis) fails the build on
+# any finding not in scripts/lint_baseline.json — hot-path syncs,
+# recompile hazards, Pallas launch bugs, tracing-schema drift, and
+# leak-shaped lifecycles are cheaper to catch before anything runs
+python scripts/lint.py src benchmarks
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # invoked directly (not via benchmarks.run) so a failure fails the build
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.prefix_cache

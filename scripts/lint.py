@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""repro-lint CLI — the build gate scripts/ci.sh runs.
+
+Usage:
+    python scripts/lint.py src benchmarks            # gate: exit 1 on new
+    python scripts/lint.py --format json src         # machine-readable
+    python scripts/lint.py --fix-baseline src benchmarks
+    python scripts/lint.py --list-rules
+
+Findings already recorded in the committed baseline
+(scripts/lint_baseline.json) are reported as warnings and do not fail
+the run; anything new exits nonzero.  ``--fix-baseline`` regenerates the
+baseline from the current tree — a deliberate act, reviewed like any
+other diff.  See src/repro/analysis/README.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import all_rules, lint_paths          # noqa: E402
+from repro.analysis import baseline as bl                  # noqa: E402
+from repro.analysis.reporters import (render_json,         # noqa: E402
+                                      render_text)
+
+DEFAULT_BASELINE = REPO_ROOT / "scripts" / "lint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="JAX/Pallas-aware static analysis for this repo")
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline file (default: scripts/"
+                         "lint_baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: every finding fails")
+    ap.add_argument("--fix-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "and exit 0")
+    ap.add_argument("--rules", help="comma-separated rule ids to run "
+                                    "(default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.rule_id}  {r.name}: {r.description}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (try: src benchmarks)")
+    if args.rules:
+        want = {r.strip() for r in args.rules.split(",")}
+        unknown = want - {r.rule_id for r in rules}
+        if unknown:
+            ap.error(f"unknown rule id(s): {', '.join(sorted(unknown))}")
+        rules = [r for r in rules if r.rule_id in want]
+
+    result = lint_paths(args.paths, root=REPO_ROOT, rules=rules)
+
+    if args.fix_baseline:
+        bl.save(args.baseline, result.findings, result.modules)
+        print(f"repro-lint: baseline rewritten with "
+              f"{len(result.findings)} finding(s) -> {args.baseline}")
+        return 0
+
+    base = [] if args.no_baseline else bl.load(args.baseline)
+    new, old, stale = bl.split(result.findings, base, result.modules)
+
+    if args.format == "json":
+        print(render_json(new, old, result.suppressed, len(stale)))
+    else:
+        print(render_text(new, old, len(result.suppressed), len(stale)))
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""repro-lint: JAX/Pallas-aware static analysis for the serving stack.
+
+The static counterpart to the runtime observatory
+(:mod:`repro.serving.profiling`): where the
+:class:`~repro.serving.profiling.RecompilationTracker` catches shape
+churn *after* it has burned compile time, these rules catch the hazard
+classes *before* the code runs — host-device syncs in the decode hot
+path, recompilation-shaped Python in jitted functions, Pallas grid /
+BlockSpec mismatches, tracing-schema drift, and leak-shaped resource
+lifecycles.  See ``src/repro/analysis/README.md`` for the rule catalog
+and the baseline/suppression workflow.
+
+Public surface:
+
+* :func:`lint_paths` — run the rule set over files/directories and get a
+  :class:`LintResult` back (the API ``scripts/lint.py`` and the fixture
+  tests drive).
+* :class:`Finding`, :class:`LintResult`, :class:`LintContext` — the data
+  model.
+* :func:`all_rules` — the registered rule instances, sorted by rule id.
+"""
+from repro.analysis.core import (Finding, LintContext, LintResult, Module,
+                                 Rule, all_rules, lint_paths, register)
+
+__all__ = ["Finding", "LintContext", "LintResult", "Module", "Rule",
+           "all_rules", "lint_paths", "register"]

@@ -1,0 +1,70 @@
+"""Baseline workflow: pre-existing findings warn, new findings fail.
+
+A baseline entry fingerprints a finding by ``(rule_id, path, stripped
+source line text)`` rather than by line *number*, so unrelated edits that
+shift code up or down don't invalidate the whole file.  Duplicate
+fingerprints are counted (multiset semantics): two identical findings on
+two identical lines need two baseline entries.
+
+``scripts/lint.py --fix-baseline`` regenerates the file deliberately;
+CI only ever reads it.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.analysis.core import Finding, Module
+
+BASELINE_VERSION = 1
+
+Key = Tuple[str, str, str]           # (rule_id, path, line text)
+
+
+def fingerprint(finding: Finding, modules: Dict[str, Module]) -> Key:
+    mod = modules.get(finding.path)
+    text = mod.line_text(finding.line) if mod is not None else ""
+    return (finding.rule_id, finding.path, text)
+
+
+def load(path) -> List[Key]:
+    path = Path(path)
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return [(e["rule"], e["path"], e["text"])
+            for e in data.get("findings", [])]
+
+
+def save(path, findings: List[Finding],
+         modules: Dict[str, Module]) -> None:
+    entries = [{"rule": r, "path": p, "text": t}
+               for r, p, t in sorted(fingerprint(f, modules)
+                                     for f in findings)]
+    payload = {"version": BASELINE_VERSION,
+               "comment": "accepted pre-existing repro-lint findings; "
+                          "regenerate with scripts/lint.py --fix-baseline",
+               "findings": entries}
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def split(findings: List[Finding], baseline: List[Key],
+          modules: Dict[str, Module]
+          ) -> Tuple[List[Finding], List[Finding], List[Key]]:
+    """Partition current findings into (new, baselined) and report the
+    stale baseline entries that no longer match anything (candidates for
+    a --fix-baseline cleanup)."""
+    budget = Counter(baseline)
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:                       # sorted upstream: stable
+        key = fingerprint(f, modules)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    stale = sorted(budget.elements())
+    return new, old, stale

@@ -1,0 +1,219 @@
+"""repro-lint core: module loading, suppressions, rule registry, driver.
+
+Everything here is plain ``ast`` — no imports of the code under analysis,
+so the linter can run on a tree whose dependencies are absent (the same
+early-failure philosophy as the source paper's build-time checks: find
+the problem before anything executes).
+
+A *rule* is an object with a stable ``rule_id`` (``RLxxx``), a one-line
+``description``, and ``run(modules, ctx) -> List[Finding]``.  Rules see
+every parsed module at once so cross-file analyses (call graphs, the
+``EVENT_KINDS`` schema) need no side channel.  Findings are filtered
+through per-line ``# repro-lint: disable=RULE`` suppressions before they
+reach the reporter; the committed baseline (``scripts/lint_baseline.json``)
+is applied one level up, in :mod:`repro.analysis.baseline`.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set
+
+# matches anywhere in a line: trailing same-line comment or a whole
+# comment line.  ``disable=all`` mutes every rule.
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_]+"
+                          r"(?:\s*,\s*[A-Za-z0-9_]+)*)")
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One diagnostic: ``path:line  RLxxx  message``."""
+    path: str       # root-relative posix path
+    line: int       # 1-indexed
+    rule_id: str
+    message: str
+
+
+@dataclass
+class Module:
+    """A parsed source file plus its suppression map."""
+    path: str                        # root-relative posix path
+    tree: ast.Module
+    lines: List[str]                 # raw source, lines[i] is line i+1
+    suppressions: Dict[int, Set[str]] = field(default_factory=dict)
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def suppressed(self, line: int, rule_id: str) -> bool:
+        rules = self.suppressions.get(line, ())
+        return "all" in rules or rule_id in rules
+
+
+def _parse_suppressions(lines: List[str]) -> Dict[int, Set[str]]:
+    """``# repro-lint: disable=RL001[,RL002]`` mutes the rule(s) on its
+    own line; a comment-only suppression line also covers the line below
+    it (so multi-line statements can carry the marker above them)."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        out.setdefault(i, set()).update(rules)
+        if text.lstrip().startswith("#"):
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+@dataclass
+class LintContext:
+    """Cross-rule shared state.
+
+    ``event_kinds`` is the tracing schema RL004 validates against.  When
+    ``None`` the rule recovers it from the scanned tree (the module that
+    assigns ``EVENT_KINDS``); tests inject a small set directly.
+    """
+    root: Path
+    event_kinds: Optional[Set[str]] = None
+
+
+class Rule:
+    """Base class; subclasses set the class attrs and implement run()."""
+    rule_id: str = ""
+    name: str = ""
+    description: str = ""
+
+    def run(self, modules: List[Module],
+            ctx: LintContext) -> List[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule_cls):
+    """Class decorator: instantiate and index by rule_id."""
+    rule = rule_cls()
+    assert rule.rule_id and rule.rule_id not in _REGISTRY, rule.rule_id
+    _REGISTRY[rule.rule_id] = rule
+    return rule_cls
+
+
+def all_rules() -> List[Rule]:
+    # importing the package triggers every @register decorator
+    from repro.analysis import rules as _rules  # noqa: F401
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+# -- driver -----------------------------------------------------------------
+
+def collect_files(paths: Sequence[Path]) -> List[Path]:
+    files: List[Path] = []
+    seen: Set[Path] = set()
+    for p in paths:
+        batch = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in batch:
+            if f.suffix != ".py":
+                continue
+            r = f.resolve()
+            if r not in seen:
+                seen.add(r)
+                files.append(f)
+    return files
+
+
+def load_module(path: Path, root: Path) -> Optional[Module]:
+    try:
+        src = path.read_text()
+        tree = ast.parse(src, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None                     # not lintable; pytest owns syntax
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    lines = src.splitlines()
+    return Module(rel, tree, lines, _parse_suppressions(lines))
+
+
+@dataclass
+class LintResult:
+    findings: List[Finding]          # live (not suppressed) findings
+    suppressed: List[Finding]        # muted by an inline disable comment
+    modules: Dict[str, Module]       # path -> Module (for fingerprints)
+
+
+def lint_paths(paths: Sequence, *, root=None, rules=None,
+               event_kinds: Optional[Set[str]] = None) -> LintResult:
+    """Parse every ``*.py`` under ``paths`` and run the rule set.
+
+    ``root`` anchors the relative paths findings are reported under
+    (default: cwd).  ``rules`` restricts the run to a subset (default:
+    every registered rule); ``event_kinds`` feeds RL004 a schema
+    directly instead of recovering it from the tree.
+    """
+    root = Path(root) if root is not None else Path.cwd()
+    mods = [m for m in (load_module(f, root)
+                        for f in collect_files([Path(p) for p in paths]))
+            if m is not None]
+    ctx = LintContext(root=root, event_kinds=event_kinds)
+    active = list(rules) if rules is not None else all_rules()
+    by_path = {m.path: m for m in mods}
+    live: List[Finding] = []
+    muted: List[Finding] = []
+    for rule in active:
+        for f in rule.run(mods, ctx):
+            mod = by_path.get(f.path)
+            if mod is not None and mod.suppressed(f.line, f.rule_id):
+                muted.append(f)
+            else:
+                live.append(f)
+    live.sort()
+    muted.sort()
+    return LintResult(live, muted, by_path)
+
+
+# -- small AST helpers shared by the rules ----------------------------------
+
+def attr_chain(node: ast.AST) -> str:
+    """Dotted-name text of a Name/Attribute chain: ``jax.block_until_ready``
+    -> that string; anything non-trivial in the chain -> '' (unknown)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    """Last path component of the called thing: ``self.pool.alloc(...)``
+    -> 'alloc', ``free(...)`` -> 'free'."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def walk_functions(tree: ast.Module):
+    """Yield (classname_or_None, FunctionDef) for every def in a module,
+    including nested ones (classname is the nearest enclosing class)."""
+    def visit(node, cls):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from visit(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield cls, child
+                yield from visit(child, cls)
+            else:
+                yield from visit(child, cls)
+    yield from visit(tree, None)

@@ -1,0 +1,40 @@
+"""Text and JSON reporters for repro-lint results."""
+from __future__ import annotations
+
+import json
+from typing import List
+
+from repro.analysis.core import Finding
+
+
+def render_text(new: List[Finding], baselined: List[Finding],
+                suppressed_count: int, stale_count: int) -> str:
+    out: List[str] = []
+    for f in baselined:
+        out.append(f"{f.path}:{f.line}: {f.rule_id} [baseline] {f.message}")
+    for f in new:
+        out.append(f"{f.path}:{f.line}: {f.rule_id} {f.message}")
+    summary = (f"repro-lint: {len(new)} new, {len(baselined)} baselined, "
+               f"{suppressed_count} suppressed")
+    if stale_count:
+        summary += (f", {stale_count} stale baseline "
+                    f"entr{'y' if stale_count == 1 else 'ies'} "
+                    f"(run --fix-baseline)")
+    out.append(summary)
+    return "\n".join(out)
+
+
+def render_json(new: List[Finding], baselined: List[Finding],
+                suppressed: List[Finding], stale_count: int) -> str:
+    def enc(f: Finding, status: str) -> dict:
+        return {"path": f.path, "line": f.line, "rule": f.rule_id,
+                "message": f.message, "status": status}
+    payload = {
+        "findings": ([enc(f, "new") for f in new]
+                     + [enc(f, "baseline") for f in baselined]),
+        "suppressed": [enc(f, "suppressed") for f in suppressed],
+        "summary": {"new": len(new), "baselined": len(baselined),
+                    "suppressed": len(suppressed),
+                    "stale_baseline": stale_count},
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)

@@ -1,0 +1,3 @@
+"""Rule modules; importing this package registers every rule."""
+from repro.analysis.rules import (hot_sync, lifecycle, pallas,  # noqa: F401
+                                  recompile, tracing_schema)

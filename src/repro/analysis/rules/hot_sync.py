@@ -1,0 +1,197 @@
+"""RL001 — host-device sync in serving hot paths.
+
+The decode loop's throughput story depends on staying async: one
+deliberate host sync per step (reading the sampled token ids) and
+nothing else.  A stray ``np.asarray`` / ``.item()`` / ``float()`` on a
+device value anywhere in the ``Scheduler.step`` / ``decode_once`` /
+``advance_prefill`` call graphs serializes the pipeline and shows up as
+inflated inter-token gaps that the runtime profiler can *measure* but
+not *explain*.  This rule names the exact line.
+
+Mechanics: roots are ``Scheduler.step`` plus any ``decode_once`` /
+``advance_prefill`` / ``_advance_prefill`` def.  Reachability is a
+name-based over-approximation (``self.x.foo()`` reaches every def named
+``foo`` in the scanned tree) — deliberate: a linter that misses a sync
+because it could not resolve a receiver is worse than one that needs an
+occasional inline suppression.  Within each reached function a
+flow-insensitive taint pass marks names assigned from device-producing
+expressions (``jnp.*`` / ``jax.*`` calls, ``.last_logits``), and flags:
+
+* ``jax.block_until_ready`` / ``jax.device_get`` anywhere (sync by
+  definition);
+* ``.item()`` / ``.tolist()`` method calls;
+* ``np.asarray`` / ``np.array`` whose argument is a direct call result
+  or a tainted expression;
+* ``float()`` / ``int()`` / ``bool()`` on a tainted expression.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.core import (Finding, LintContext, Module, Rule,
+                                 attr_chain, register, walk_functions)
+
+ROOT_CLASS_METHODS = {("Scheduler", "step")}
+ROOT_NAMES = {"decode_once", "advance_prefill", "_advance_prefill"}
+
+DEVICE_MODULES = {"jnp", "jax", "lax"}
+DEVICE_ATTRS = {"last_logits"}
+SYNC_CHAINS = {"jax.block_until_ready", "jax.device_get"}
+NUMPY_CASTS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+               "onp.asarray", "onp.array"}
+SCALAR_CASTS = {"float", "int", "bool"}
+
+
+def _is_device_expr(node: ast.AST, tainted: Set[str]) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in DEVICE_ATTRS:
+            return True
+        return _is_device_expr(node.value, tainted)
+    if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if chain.split(".", 1)[0] in DEVICE_MODULES:
+            return True
+        # method chain on a device receiver: x.reshape(...), x.astype(...)
+        if isinstance(node.func, ast.Attribute) and \
+                _is_device_expr(node.func.value, tainted):
+            return True
+        return False
+    if isinstance(node, ast.BinOp):
+        return (_is_device_expr(node.left, tainted)
+                or _is_device_expr(node.right, tainted))
+    if isinstance(node, ast.UnaryOp):
+        return _is_device_expr(node.operand, tainted)
+    if isinstance(node, ast.Subscript):
+        return _is_device_expr(node.value, tainted)
+    if isinstance(node, ast.IfExp):
+        return (_is_device_expr(node.body, tainted)
+                or _is_device_expr(node.orelse, tainted))
+    return False
+
+
+def _taint_names(fn: ast.FunctionDef) -> Set[str]:
+    """Names assigned from device expressions, to a fixpoint (flow
+    insensitive: order of assignment does not matter)."""
+    tainted: Set[str] = set()
+    for _ in range(4):
+        grew = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            else:
+                continue
+            if node.value is None or \
+                    not _is_device_expr(node.value, tainted):
+                continue
+            for t in targets:
+                names = [t] if isinstance(t, ast.Name) else \
+                    [e for e in ast.walk(t) if isinstance(e, ast.Name)]
+                for n in names:
+                    if n.id not in tainted:
+                        tainted.add(n.id)
+                        grew = True
+        if not grew:
+            break
+    return tainted
+
+
+def _function_index(modules: List[Module]):
+    """name -> [(module, classname, fn)] over every def in the tree."""
+    index: Dict[str, List[Tuple[Module, str, ast.FunctionDef]]] = {}
+    for mod in modules:
+        for cls, fn in walk_functions(mod.tree):
+            index.setdefault(fn.name, []).append((mod, cls, fn))
+    return index
+
+
+def _called_names(fn: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute):
+                out.add(node.func.attr)
+            elif isinstance(node.func, ast.Name):
+                out.add(node.func.id)
+    return out
+
+
+@register
+class HotPathSyncRule(Rule):
+    rule_id = "RL001"
+    name = "hot-path-host-sync"
+    description = ("host-device synchronization reachable from "
+                   "Scheduler.step / decode_once / advance_prefill")
+
+    def run(self, modules: List[Module],
+            ctx: LintContext) -> List[Finding]:
+        index = _function_index(modules)
+
+        # roots + BFS over called names
+        work: List[Tuple[Module, str, ast.FunctionDef, str]] = []
+        seen: Set[int] = set()
+        for name, entries in index.items():
+            for mod, cls, fn in entries:
+                is_root = ((cls, name) in ROOT_CLASS_METHODS
+                           or name in ROOT_NAMES)
+                if is_root and id(fn) not in seen:
+                    seen.add(id(fn))
+                    qual = f"{cls}.{name}" if cls else name
+                    work.append((mod, cls, fn, qual))
+        reached = []
+        while work:
+            mod, cls, fn, origin = work.pop()
+            reached.append((mod, cls, fn, origin))
+            for callee in _called_names(fn):
+                for cmod, ccls, cfn in index.get(callee, ()):
+                    if id(cfn) not in seen:
+                        seen.add(id(cfn))
+                        work.append((cmod, ccls, cfn, origin))
+
+        findings: List[Finding] = []
+        flagged: Set[Tuple[str, int]] = set()
+
+        def emit(mod, node, msg):
+            key = (mod.path, node.lineno)
+            if key not in flagged:
+                flagged.add(key)
+                findings.append(Finding(mod.path, node.lineno,
+                                        self.rule_id, msg))
+
+        for mod, cls, fn, origin in reached:
+            qual = f"{cls}.{fn.name}" if cls else fn.name
+            where = (f"in `{qual}` (hot path via {origin})"
+                     if qual != origin else f"in hot path `{qual}`")
+            tainted = _taint_names(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = attr_chain(node.func)
+                if chain in SYNC_CHAINS:
+                    emit(mod, node, f"explicit device sync "
+                                    f"`{chain}` {where}")
+                    continue
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in ("item", "tolist"):
+                    emit(mod, node, f"`.{node.func.attr}()` forces a "
+                                    f"host-device sync {where}")
+                    continue
+                if chain in NUMPY_CASTS and node.args:
+                    arg = node.args[0]
+                    if isinstance(arg, ast.Call) or \
+                            _is_device_expr(arg, tainted):
+                        emit(mod, node,
+                             f"`{chain}` on a device value forces a "
+                             f"host-device sync {where}")
+                    continue
+                if isinstance(node.func, ast.Name) and \
+                        node.func.id in SCALAR_CASTS and node.args and \
+                        _is_device_expr(node.args[0], tainted):
+                    emit(mod, node,
+                         f"`{node.func.id}()` on a device value forces "
+                         f"a host-device sync {where}")
+        return findings

@@ -1,0 +1,110 @@
+"""RL005 — resource-lifecycle pairing.
+
+The serving stack is built on refcounted pools: KV blocks, prefix-cache
+pins, slot allocations.  The pre-PR-3 ``_admit`` pin leak is the
+canonical bug shape — an acquisition site whose class has no matching
+release path, so the resource count only ever goes up and the pool
+starves under sustained load (a leak the invariant tests catch only on
+the workloads they happen to run).
+
+The check is class-scoped and receiver-matched: for every acquisition
+call (``alloc`` / ``ref`` / ``pin`` / ``fork`` / ``acquire`` families)
+on a receiver like ``self.pool`` or a bare local alias, the *same class*
+must contain a paired release call (``free`` / ``unref`` / ``unpin`` /
+``release`` families) on the *same receiver*.  For ``self.x(...)``
+acquisitions, defining the paired method on the class also satisfies the
+rule (the release may be driven externally).  Deliberate ownership
+transfers — handing a block to another object that releases it — are
+exactly what the inline suppression comment is for; the comment then
+documents the transfer at the acquisition site.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.core import (Finding, LintContext, Module, Rule,
+                                 register)
+
+ACQUIRE_PAIRS: Dict[str, Set[str]] = {
+    "alloc": {"free", "release", "dealloc"},
+    "alloc_slot": {"free_slot", "release_slot"},
+    "ref": {"unref", "deref"},
+    "pin": {"unpin", "release"},
+    "fork": {"unref", "free", "release"},
+    "acquire": {"release"},
+}
+
+
+def _receiver(func: ast.Attribute) -> str:
+    """'self.pool' for self.pool.alloc(...), 'pool' for pool.alloc(...),
+    'self' for self.alloc(...); '' when the chain is not simple."""
+    v = func.value
+    if isinstance(v, ast.Name):
+        return v.id
+    if isinstance(v, ast.Attribute) and isinstance(v.value, ast.Name):
+        return f"{v.value.id}.{v.attr}"
+    return ""
+
+
+def _class_calls(cls: ast.ClassDef) -> List[Tuple[str, str, int]]:
+    """(receiver, method, lineno) for every simple attribute call in the
+    class body, nested functions included."""
+    out = []
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute):
+            recv = _receiver(node.func)
+            if recv:
+                out.append((recv, node.func.attr, node.lineno))
+    return out
+
+
+@register
+class LifecyclePairingRule(Rule):
+    rule_id = "RL005"
+    name = "resource-lifecycle-pairing"
+    description = ("alloc/ref/pin acquisition sites with no matching "
+                   "free/unref/release in the same class")
+
+    def run(self, modules: List[Module],
+            ctx: LintContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef):
+                    findings.extend(self._check_class(mod, node))
+        return findings
+
+    def _check_class(self, mod: Module,
+                     cls: ast.ClassDef) -> List[Finding]:
+        calls = _class_calls(cls)
+        methods = {n.name for n in cls.body
+                   if isinstance(n, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))}
+        # receiver -> set of method names called on it anywhere in class
+        called: Dict[str, Set[str]] = {}
+        for recv, meth, _ in calls:
+            called.setdefault(recv, set()).add(meth)
+
+        out: List[Finding] = []
+        seen: Set[Tuple[str, str]] = set()
+        for recv, meth, lineno in calls:
+            releases = ACQUIRE_PAIRS.get(meth)
+            if releases is None or (recv, meth) in seen:
+                continue
+            seen.add((recv, meth))
+            paired = bool(called.get(recv, set()) & releases)
+            if not paired and recv == "self":
+                # self-acquisition: a defined release method counts (it
+                # may be driven by the owner of this object)
+                paired = bool(methods & releases)
+            if not paired:
+                wants = "/".join(sorted(releases))
+                out.append(Finding(
+                    mod.path, lineno, self.rule_id,
+                    f"`{recv}.{meth}(...)` in class `{cls.name}` has no "
+                    f"matching `{recv}.{wants}` — leak-shaped unless "
+                    f"ownership transfers elsewhere (suppress with a "
+                    f"comment saying where)"))
+        return out

@@ -1,0 +1,149 @@
+"""RL003 — Pallas kernel launch checks.
+
+Pallas failure modes are notoriously late and opaque: an index-map
+lambda with the wrong arity fails deep inside tracing, a scratch shape
+mismatch OOMs or corrupts VMEM on hardware, and a kernel without an
+``interpret=`` escape hatch cannot run in CPU CI at all (the whole test
+strategy of this repo — interpret mode on CPU, compiled on TPU —
+depends on it).  All three are statically checkable at the
+``pl.pallas_call`` site:
+
+* index-map arity: every ``BlockSpec`` index-map lambda must take
+  exactly ``grid rank`` parameters — plus ``num_scalar_prefetch`` when
+  launched through a ``PrefetchScalarGridSpec`` (the prefetched scalar
+  refs are prepended to the index-map arguments).
+* VMEM scratch: ``pltpu.VMEM(...)`` entries in ``scratch_shapes`` must
+  pass a literal shape tuple and an explicit dtype.
+* CPU fallback: the ``pallas_call`` must thread an ``interpret=`` kwarg.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.core import (Finding, LintContext, Module, Rule,
+                                 attr_chain, register)
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _grid_rank(node: ast.AST) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return 1                          # grid=N is a rank-1 launch
+    return None                           # computed elsewhere: skip
+
+
+def _index_map_arity(node: ast.AST, mod: Module) -> Optional[int]:
+    if isinstance(node, ast.Lambda):
+        a = node.args
+        return len(a.posonlyargs) + len(a.args)
+    if isinstance(node, ast.Name):        # def'd index map: resolve local
+        for sub in ast.walk(mod.tree):
+            if isinstance(sub, ast.FunctionDef) and sub.name == node.id:
+                a = sub.args
+                return len(a.posonlyargs) + len(a.args)
+    return None
+
+
+def _block_specs(node: ast.AST) -> List[ast.Call]:
+    """BlockSpec(...) calls inside an in_specs/out_specs expression."""
+    out = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and \
+                attr_chain(sub.func).endswith("BlockSpec"):
+            out.append(sub)
+    return out
+
+
+@register
+class PallasLaunchRule(Rule):
+    rule_id = "RL003"
+    name = "pallas-launch-check"
+    description = ("BlockSpec index-map arity vs grid rank, VMEM scratch "
+                   "shape/dtype, missing interpret= CPU fallback")
+
+    def run(self, modules: List[Module],
+            ctx: LintContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call) and \
+                        attr_chain(node.func).endswith("pallas_call"):
+                    findings.extend(self._check_call(mod, node))
+        return findings
+
+    def _check_call(self, mod: Module, call: ast.Call) -> List[Finding]:
+        out: List[Finding] = []
+
+        grid = _kw(call, "grid")
+        grid_spec = _kw(call, "grid_spec")
+        prefetch = 0
+        specs_holder = call                 # where in/out_specs live
+        if grid_spec is not None and isinstance(grid_spec, ast.Call):
+            specs_holder = grid_spec
+            grid = _kw(grid_spec, "grid")
+            npf = _kw(grid_spec, "num_scalar_prefetch")
+            if isinstance(npf, ast.Constant) and isinstance(npf.value, int):
+                prefetch = npf.value
+        rank = _grid_rank(grid) if grid is not None else None
+
+        if rank is not None:
+            expect = rank + prefetch
+            spec_nodes = []
+            for kw_name in ("in_specs", "out_specs"):
+                v = _kw(specs_holder, kw_name)
+                if v is not None:
+                    spec_nodes.extend(_block_specs(v))
+            for spec in spec_nodes:
+                imap = None
+                if len(spec.args) >= 2:
+                    imap = spec.args[1]
+                else:
+                    imap = _kw(spec, "index_map")
+                if imap is None:
+                    continue
+                arity = _index_map_arity(imap, mod)
+                if arity is not None and arity != expect:
+                    extra = (f" + {prefetch} scalar-prefetch arg"
+                             f"{'s' if prefetch != 1 else ''}"
+                             if prefetch else "")
+                    out.append(Finding(
+                        mod.path, imap.lineno, self.rule_id,
+                        f"BlockSpec index map takes {arity} args but the "
+                        f"launch grid has rank {rank}{extra} (expected "
+                        f"{expect}) — Pallas will fail at trace time"))
+
+        scratch = _kw(specs_holder, "scratch_shapes")
+        if scratch is not None:
+            for sub in ast.walk(scratch):
+                if not (isinstance(sub, ast.Call)
+                        and attr_chain(sub.func).endswith("VMEM")):
+                    continue
+                shape = sub.args[0] if sub.args else _kw(sub, "shape")
+                dtype = (sub.args[1] if len(sub.args) >= 2
+                         else _kw(sub, "dtype"))
+                if not isinstance(shape, (ast.Tuple, ast.List)):
+                    out.append(Finding(
+                        mod.path, sub.lineno, self.rule_id,
+                        "VMEM scratch shape must be a literal tuple "
+                        "(scalar or computed shapes hide rank bugs "
+                        "until TPU lowering)"))
+                if dtype is None:
+                    out.append(Finding(
+                        mod.path, sub.lineno, self.rule_id,
+                        "VMEM scratch entry is missing an explicit "
+                        "dtype"))
+
+        if _kw(call, "interpret") is None:
+            out.append(Finding(
+                mod.path, call.lineno, self.rule_id,
+                "pallas_call without an `interpret=` kwarg cannot fall "
+                "back to CPU interpret mode — untestable off-TPU"))
+        return out

@@ -1,0 +1,321 @@
+"""RL002 — recompilation hazards in jitted functions.
+
+The static twin of the runtime :class:`RecompilationTracker`
+(:mod:`repro.serving.profiling`): that tracker reports post-warm
+compiles after they have already burned wall clock; this rule points at
+the code shapes that cause them before anything runs.
+
+Per jitted function (``@jax.jit`` / ``@functools.partial(jax.jit, ...)``
+decorators and ``jax.jit(fn_or_lambda, ...)`` call sites):
+
+* **value branch** — an ``if``/``while`` whose test reads a *non-static*
+  parameter's value.  Under trace this either raises (abstract truth
+  value) or, with weak types/static promotion, silently retraces per
+  distinct value.  Shape introspection (``p.shape`` / ``p.ndim`` /
+  ``p.dtype`` / ``len(p)``) and ``is None`` arms (a deliberate
+  trace-per-arity pattern) are exempt.
+* **concretization** — ``int()`` / ``float()`` / ``bool()`` /
+  ``.item()`` on a non-static parameter inside the traced body.
+* **unhashable static** — a parameter named in ``static_argnames`` (or
+  indexed by ``static_argnums``) whose default is a mutable literal:
+  every call misses the jit cache because the key never hashes equal.
+* **mutable closure capture** — the traced body reads a name bound to a
+  list/dict/set literal in an enclosing scope; the trace bakes in the
+  first value and later mutations are silently ignored (or, for
+  container identity keys, retrace per call).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, LintContext, Module, Rule,
+                                 attr_chain, register)
+
+SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                    ast.DictComp, ast.SetComp)
+JIT_CHAINS = {"jax.jit", "jit"}
+PARTIAL_CHAINS = {"functools.partial", "partial"}
+
+
+def _const_strs(node) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def _const_ints(node) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+    return []
+
+
+def _jit_static(call: ast.Call) -> Tuple[Set[str], Set[int]]:
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names.update(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            nums.update(_const_ints(kw.value))
+    return names, nums
+
+
+def _params(fn) -> List[str]:
+    a = fn.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+            + [p.arg for p in a.kwonlyargs])
+
+
+def _param_defaults(fn) -> Dict[str, ast.AST]:
+    a = fn.args
+    out: Dict[str, ast.AST] = {}
+    pos = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+    for name, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        out[name] = default
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            out[p.arg] = d
+    return out
+
+
+class _JitTarget:
+    def __init__(self, fn, static_names: Set[str], static_nums: Set[int],
+                 enclosing_mutables: Dict[str, int]):
+        self.fn = fn                       # FunctionDef or Lambda
+        pos = ([p.arg for p in fn.args.posonlyargs]
+               + [p.arg for p in fn.args.args])
+        self.static = set(static_names)
+        self.static.update(pos[i] for i in static_nums if i < len(pos))
+        # name -> lineno of the mutable-literal binding it would capture
+        self.enclosing_mutables = enclosing_mutables
+
+    @property
+    def label(self) -> str:
+        return getattr(self.fn, "name", "<lambda>")
+
+
+def _collect_targets(mod: Module) -> List[_JitTarget]:
+    """One pass with an explicit scope stack: find jit-decorated defs and
+    jax.jit(...) call sites, remembering which enclosing names are bound
+    to mutable literals (for the closure-capture check)."""
+    targets: List[_JitTarget] = []
+    # all defs by name (module-wide) for jax.jit(name) resolution
+    defs_by_name: Dict[str, List[ast.AST]] = {}
+
+    def index_defs(node):
+        for child in ast.walk(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs_by_name.setdefault(child.name, []).append(child)
+    index_defs(mod.tree)
+
+    claimed: Set[int] = set()
+
+    def mutable_bindings(scope_node) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        body = scope_node.body if hasattr(scope_node, "body") else []
+        for stmt in body if isinstance(body, list) else []:
+            if isinstance(stmt, ast.Assign) and \
+                    isinstance(stmt.value, MUTABLE_LITERALS):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        out[t.id] = stmt.lineno
+        return out
+
+    def visit(node, scope_mutables: Dict[str, int]):
+        here = dict(scope_mutables)
+        here.update(mutable_bindings(node))
+
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                sn, sv = set(), set()
+                jitted = False
+                for dec in child.decorator_list:
+                    chain = attr_chain(dec)
+                    if chain in JIT_CHAINS:
+                        jitted = True
+                    elif isinstance(dec, ast.Call):
+                        dchain = attr_chain(dec.func)
+                        if dchain in JIT_CHAINS:
+                            jitted = True
+                            n, v = _jit_static(dec)
+                            sn |= n
+                            sv |= v
+                        elif dchain in PARTIAL_CHAINS and dec.args and \
+                                attr_chain(dec.args[0]) in JIT_CHAINS:
+                            jitted = True
+                            n, v = _jit_static(dec)
+                            sn |= n
+                            sv |= v
+                if jitted and id(child) not in claimed:
+                    claimed.add(id(child))
+                    targets.append(_JitTarget(child, sn, sv, here))
+                visit(child, here)
+            else:
+                visit(child, here)
+
+        # jax.jit(fn_or_lambda, ...) call sites in this scope's direct body
+        for stmt in getattr(node, "body", []) \
+                if isinstance(getattr(node, "body", None), list) else []:
+            for sub in ast.walk(stmt):
+                if not (isinstance(sub, ast.Call)
+                        and attr_chain(sub.func) in JIT_CHAINS
+                        and sub.args):
+                    continue
+                sn, sv = _jit_static(sub)
+                arg = sub.args[0]
+                fns: List[ast.AST] = []
+                if isinstance(arg, ast.Lambda):
+                    fns = [arg]
+                elif isinstance(arg, ast.Name):
+                    fns = defs_by_name.get(arg.id, [])
+                for fn in fns:
+                    if id(fn) not in claimed:
+                        claimed.add(id(fn))
+                        targets.append(_JitTarget(fn, sn, sv, here))
+
+    visit(mod.tree, {})
+    return targets
+
+
+def _locals_of(fn) -> Set[str]:
+    out: Set[str] = set(_params(fn))
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        out.add(n.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.add(node.name)
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            tgt = node.target
+            for n in ast.walk(tgt):
+                if isinstance(n, ast.Name):
+                    out.add(n.id)
+    return out
+
+
+def _value_branch_params(test: ast.AST, nonstatic: Set[str]) -> Set[str]:
+    """Non-static param names whose runtime *value* the test reads."""
+    hits: Set[str] = set()
+
+    def scan(node):
+        if isinstance(node, ast.Attribute) and node.attr in SHAPE_ATTRS:
+            return                        # shape/dtype introspection: fine
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            if chain == "len" or chain.endswith(".len"):
+                return
+            for a in node.args:
+                scan(a)
+            return
+        if isinstance(node, ast.Compare):
+            none_ops = all(isinstance(op, (ast.Is, ast.IsNot))
+                           for op in node.ops)
+            none_cmps = all(isinstance(c, ast.Constant) and c.value is None
+                            for c in node.comparators)
+            if none_ops and none_cmps:
+                return                    # `x is (not) None`: arity trace
+        if isinstance(node, ast.Name) and node.id in nonstatic:
+            hits.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            scan(child)
+
+    scan(test)
+    return hits
+
+
+@register
+class RecompileHazardRule(Rule):
+    rule_id = "RL002"
+    name = "jit-recompile-hazard"
+    description = ("Python-value branches, concretization, unhashable "
+                   "statics, and mutable closure capture in jitted "
+                   "functions")
+
+    def run(self, modules: List[Module],
+            ctx: LintContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in modules:
+            for tgt in _collect_targets(mod):
+                findings.extend(self._check(mod, tgt))
+        return findings
+
+    def _check(self, mod: Module, tgt: _JitTarget) -> List[Finding]:
+        out: List[Finding] = []
+        fn = tgt.fn
+        params = set(_params(fn))
+        nonstatic = params - tgt.static
+
+        # unhashable static defaults
+        for name, default in _param_defaults(fn).items():
+            if name in tgt.static and isinstance(default, MUTABLE_LITERALS):
+                out.append(Finding(
+                    mod.path, default.lineno, self.rule_id,
+                    f"jitted `{tgt.label}`: static arg `{name}` has a "
+                    f"mutable (unhashable) default — every call misses "
+                    f"the jit cache"))
+
+        body = getattr(fn, "body", fn.body if hasattr(fn, "body") else [])
+        body_nodes = body if isinstance(body, list) else [body]
+
+        for stmt in body_nodes:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.If, ast.While)):
+                    for name in sorted(
+                            _value_branch_params(node.test, nonstatic)):
+                        out.append(Finding(
+                            mod.path, node.lineno, self.rule_id,
+                            f"jitted `{tgt.label}`: branch on runtime "
+                            f"value of arg `{name}` — traces fail on "
+                            f"abstract values or retrace per value; "
+                            f"hoist it or mark it static"))
+                elif isinstance(node, ast.Call):
+                    if isinstance(node.func, ast.Name) and \
+                            node.func.id in ("int", "float", "bool") and \
+                            node.args and \
+                            isinstance(node.args[0], ast.Name) and \
+                            node.args[0].id in nonstatic:
+                        out.append(Finding(
+                            mod.path, node.lineno, self.rule_id,
+                            f"jitted `{tgt.label}`: "
+                            f"`{node.func.id}({node.args[0].id})` "
+                            f"concretizes a traced arg"))
+                    elif isinstance(node.func, ast.Attribute) and \
+                            node.func.attr == "item" and \
+                            isinstance(node.func.value, ast.Name) and \
+                            node.func.value.id in nonstatic:
+                        out.append(Finding(
+                            mod.path, node.lineno, self.rule_id,
+                            f"jitted `{tgt.label}`: "
+                            f"`{node.func.value.id}.item()` concretizes "
+                            f"a traced arg"))
+
+        # mutable closure capture
+        if tgt.enclosing_mutables:
+            bound = _locals_of(fn)
+            reported: Set[str] = set()
+            for stmt in body_nodes:
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Name) and \
+                            isinstance(node.ctx, ast.Load) and \
+                            node.id in tgt.enclosing_mutables and \
+                            node.id not in bound and \
+                            node.id not in reported:
+                        reported.add(node.id)
+                        out.append(Finding(
+                            mod.path, node.lineno, self.rule_id,
+                            f"jitted `{tgt.label}` closes over mutable "
+                            f"`{node.id}` (bound at line "
+                            f"{tgt.enclosing_mutables[node.id]}) — the "
+                            f"trace bakes in its first value; later "
+                            f"mutations are silently ignored"))
+        return out

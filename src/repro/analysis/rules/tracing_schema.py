@@ -1,0 +1,107 @@
+"""RL004 — tracing-schema drift in ``serving/``.
+
+The tracing pipeline's contract is a closed event vocabulary:
+``EVENT_KINDS`` in :mod:`repro.serving.tracing` is what
+``scripts/trace_report.py --validate`` enforces on exported JSONL and
+what the Chrome-trace exporter switches on.  A ``kind`` literal that
+drifts from the enum produces events that pass silently at emission and
+fail (or vanish) at validation/visualization time — exactly the
+late-failure shape this linter exists to move earlier.  Ditto the
+metrics path: every counter mutation is supposed to flow through the
+tracer's single recording path so traces and metrics can never disagree;
+a direct ``metrics.record_*`` call in serving code bypasses it.
+
+Checks, scoped to files under a ``serving/`` directory:
+
+* every string literal passed as the first argument of an ``_emit(...)``
+  call, or as a ``kind=`` keyword anywhere, must be a member of
+  ``EVENT_KINDS`` (recovered from the scanned tree, or injected via
+  :class:`LintContext` in tests);
+* ``*.metrics.record_*(...)`` calls outside ``tracing.py`` /
+  ``metrics.py`` are flagged as tracer bypasses.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.core import (Finding, LintContext, Module, Rule,
+                                 attr_chain, register)
+
+
+def _find_event_kinds(modules: List[Module]) -> Optional[Set[str]]:
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not any(isinstance(t, ast.Name) and t.id == "EVENT_KINDS"
+                       for t in node.targets):
+                continue
+            kinds: Set[str] = set()
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Constant) and \
+                        isinstance(sub.value, str):
+                    kinds.add(sub.value)
+            if kinds:
+                return kinds
+    return None
+
+
+def _in_serving(mod: Module) -> bool:
+    return "serving/" in mod.path or mod.path.startswith("serving")
+
+
+@register
+class TracingSchemaRule(Rule):
+    rule_id = "RL004"
+    name = "tracing-schema-drift"
+    description = ("event kind literals outside EVENT_KINDS; "
+                   "metrics.record_* calls bypassing the tracer")
+
+    def run(self, modules: List[Module],
+            ctx: LintContext) -> List[Finding]:
+        kinds = ctx.event_kinds
+        if kinds is None:
+            kinds = _find_event_kinds(modules)
+        findings: List[Finding] = []
+        for mod in modules:
+            if not _in_serving(mod):
+                continue
+            base = mod.path.rsplit("/", 1)[-1]
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = (node.func.attr
+                        if isinstance(node.func, ast.Attribute)
+                        else node.func.id
+                        if isinstance(node.func, ast.Name) else "")
+                if kinds is not None:
+                    lit: Optional[ast.Constant] = None
+                    if name == "_emit" and node.args and \
+                            isinstance(node.args[0], ast.Constant) and \
+                            isinstance(node.args[0].value, str):
+                        lit = node.args[0]
+                    for kw in node.keywords:
+                        if kw.arg == "kind" and \
+                                isinstance(kw.value, ast.Constant) and \
+                                isinstance(kw.value.value, str):
+                            lit = kw.value
+                    if lit is not None and lit.value not in kinds:
+                        findings.append(Finding(
+                            mod.path, lit.lineno, self.rule_id,
+                            f"event kind '{lit.value}' is not in "
+                            f"EVENT_KINDS — it will fail trace "
+                            f"validation and be dropped by exporters"))
+                if name.startswith("record_") and \
+                        base not in ("tracing.py", "metrics.py") and \
+                        isinstance(node.func, ast.Attribute):
+                    chain = attr_chain(node.func)
+                    head = chain.rsplit(".", 2)
+                    if len(head) >= 2 and head[-2] == "metrics":
+                        findings.append(Finding(
+                            mod.path, node.lineno, self.rule_id,
+                            f"direct `{chain}(...)` bypasses the "
+                            f"tracer's single recording path — traces "
+                            f"and metrics can disagree; route through "
+                            f"the Tracer"))
+        return findings

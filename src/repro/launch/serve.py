@@ -38,6 +38,11 @@ def main(argv=None):
                     help="continuous-batching slots per replica")
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--greedy", action="store_true")
+    ap.add_argument("--greedy-tie-eps", type=float, default=0.0,
+                    help="deterministic greedy tie break: pick the "
+                         "lowest token id within eps of the max logit, "
+                         "making argmax layout-stable under paged/dense "
+                         "summation-order noise (0 disables)")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--metrics-json", default=None,
                     help="export full per-replica + merged telemetry JSON")
@@ -110,7 +115,8 @@ def main(argv=None):
                              max_slots=args.max_slots, rng_seed=r,
                              prefix_cache_blocks=args.prefix_cache_blocks,
                              paged=args.paged, num_blocks=args.num_blocks,
-                             prefill_batch=args.prefill_batch)
+                             prefill_batch=args.prefill_batch,
+                             greedy_tie_eps=args.greedy_tie_eps)
                for r in range(args.replicas)]
     gateway = ReplicaGateway.from_engines(
         engines, prefill_token_budget=args.prefill_token_budget,

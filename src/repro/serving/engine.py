@@ -157,13 +157,18 @@ class ServingEngine:
                  rng_seed: int = 0, kv_block_size: int = 16,
                  prefix_cache_blocks: int = 0, prefill_chunk: int = 16,
                  paged: bool = False, num_blocks: Optional[int] = None,
-                 prefill_batch: int = 4):
+                 prefill_batch: int = 4, greedy_tie_eps: float = 0.0):
         self.cfg = cfg
         self.params = params
         self.max_seq_len = max_seq_len
         self.max_slots = max_slots
         self.key = jax.random.PRNGKey(rng_seed)
         self.prefill_chunk = prefill_chunk
+        # > 0 makes greedy argmax layout-deterministic: any token whose
+        # logit is within eps of the max is eligible and the LOWEST id
+        # wins, so the ~1e-3 page-order summation noise between the
+        # paged and dense layouts can no longer flip a near-tie argmax
+        self.greedy_tie_eps = float(greedy_tie_eps)
         # rows per compiled paged-prefill program (co-admission width);
         # dense mode prefills serially whatever the batch size
         self.prefill_batch = max(1, min(prefill_batch, max_slots))
@@ -249,6 +254,8 @@ class ServingEngine:
 
         self._prefill_chunk = jax.jit(prefill_chunk_fn, donate_argnums=2)
 
+        tie_eps = self.greedy_tie_eps        # jit closure constant
+
         def sample(key, logits, temps, greedy):
             # temperatures below epsilon ARE greedy: dividing by a tiny
             # clamp overflows f32 and feeds categorical NaN-producing
@@ -256,7 +263,15 @@ class ServingEngine:
             greedy = jnp.logical_or(greedy, temps < 1e-4)
             safe_t = jnp.where(greedy, jnp.float32(1.0), temps)
             cat = jax.random.categorical(key, logits / safe_t[:, None])
-            return jnp.where(greedy, jnp.argmax(logits, axis=-1), cat)
+            if tie_eps > 0.0:
+                # deterministic tie break: lowest token id within eps of
+                # the max, immune to summation-order noise across the
+                # paged/dense layouts (ROADMAP near-tie caveat)
+                amax = jnp.max(logits, axis=-1, keepdims=True)
+                g_tok = jnp.argmax(logits >= amax - tie_eps, axis=-1)
+            else:
+                g_tok = jnp.argmax(logits, axis=-1)
+            return jnp.where(greedy, g_tok, cat)
 
         self._sample_vec = jax.jit(sample)
 
@@ -560,7 +575,9 @@ class ServingEngine:
         self.key, sub = jax.random.split(self.key)
         self.recompiles.observe("sample", np.shape(logits),
                                 tracer=self.tracer)
-        return np.asarray(self._sample_vec(
+        # deliberate: THE one host sync per step — the scheduler needs
+        # concrete token ids for EOS/retirement bookkeeping
+        return np.asarray(self._sample_vec(  # repro-lint: disable=RL001
             sub, jnp.asarray(logits), jnp.asarray(temps, jnp.float32),
             jnp.asarray(greedy)))
 

