@@ -1,0 +1,194 @@
+"""Fault-tolerance benchmark: kill 1 of 3 replicas mid-burst.
+
+The fleet claim behind PR 9, measured end to end: a 3-replica gateway
+serving a request burst loses one replica to an injected crash partway
+through, salvages its queued + in-flight requests, re-routes them to the
+survivors under the retry policy — and **every** request still completes
+with greedy outputs bit-identical to a fault-free run of the same
+workload (``greedy_tie_eps`` armed, so the changed batch composition
+after failover cannot flip a near-tie argmax).
+
+Written to ``BENCH_faults.json`` (validated by ``benchmarks/run.py
+--check``):
+
+* ``requests_completed == n_requests`` and ``failed_requests == 0`` —
+  the kill loses zero requests;
+* ``salvage_success_rate == 1.0`` — every salvaged (retried) request
+  completed on a survivor;
+* ``bit_identical_outputs`` — fleet-under-fault outputs equal the
+  fault-free oracle's, token for token;
+* ``recovery_wall_s`` — failover event to last salvaged completion;
+* the merged trace timeline is exported to
+  ``results/trace_faults.jsonl`` for ``scripts/trace_report.py
+  --faults``.
+
+  PYTHONPATH=src python -m benchmarks.fault_tolerance          # smoke
+  PYTHONPATH=src python -m benchmarks.fault_tolerance --full
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+KILLED = "replica1"
+CRASH_STEP = 4
+TIE_EPS = 1e-2
+TRACE_OUT = os.path.join("results", "trace_faults.jsonl")
+
+
+def _workload(cfg, n):
+    import numpy as np
+
+    from repro.serving import Request, SamplingParams
+    rng = np.random.default_rng(17)
+    return [Request(rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(4, 16)), dtype=np.int32),
+                    SamplingParams(max_new_tokens=int(rng.integers(4, 9)),
+                                   greedy=True))
+            for _ in range(n)]
+
+
+def run(quick: bool = True, out_path: str = "BENCH_faults.json"):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving import (FaultPlan, FaultSpec, ReplicaGateway,
+                               RequestFailed, Scheduler, ServingEngine)
+    from repro.serving.health import DEAD
+
+    arch = "qwen2-0.5b"
+    block, max_seq_len, slots, prefill_batch, chunk = 16, 64, 4, 2, 8
+    n_requests = 12 if quick else 18
+
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    num_blocks = slots * (max_seq_len // block)
+
+    def engine():
+        return ServingEngine(cfg, params, max_seq_len=max_seq_len,
+                             max_slots=slots, kv_block_size=block,
+                             prefill_chunk=chunk,
+                             prefill_batch=prefill_batch,
+                             paged=True, num_blocks=num_blocks,
+                             greedy_tie_eps=TIE_EPS)
+
+    reqs = _workload(cfg, n_requests)
+
+    # fault-free oracle: the same workload on one unharmed replica
+    oracle_sched = Scheduler(engine())
+    oracle_rids = [oracle_sched.submit(r) for r in reqs]
+    oracle_sched.run()
+    oracle = [oracle_sched.output(r) for r in oracle_rids]
+
+    # the fleet under fault: replica1 crashes at its 5th step, squarely
+    # mid-burst — in-flight decodes and queued admissions both salvage
+    plan = FaultPlan([FaultSpec(kind="crash", replica=KILLED,
+                                at_step=CRASH_STEP)])
+    gw = ReplicaGateway.from_engines([engine() for _ in range(3)],
+                                     tracing=True, fault_plan=plan)
+
+    t0 = time.perf_counter()
+    handles = [gw.submit(r) for r in reqs[: 2 * n_requests // 3]]
+    for _ in range(CRASH_STEP + 2):        # let the crash land mid-burst
+        gw.step()
+    handles += [gw.submit(r) for r in reqs[2 * n_requests // 3:]]
+    gw.drain()
+    wall = time.perf_counter() - t0
+
+    assert gw.health[1].state == DEAD, "the injected crash never fired"
+    stats = gw.stats()
+    fleet = stats["fleet"]
+    assert fleet["failovers"] == 1
+
+    completed = failed = 0
+    bit_identical = True
+    for h, ref in zip(handles, oracle):
+        out = gw.result(h)
+        if isinstance(out, RequestFailed):
+            failed += 1
+            continue
+        completed += 1
+        if not np.array_equal(out, ref):
+            bit_identical = False
+    assert completed == n_requests, (
+        f"{n_requests - completed} request(s) lost to the kill")
+    assert failed == 0
+    assert bit_identical, "failover changed greedy outputs"
+
+    salvaged = [r for r in gw._requests.values() if r.attempts > 0]
+    assert salvaged, "the kill salvaged nothing — crash landed too late"
+    salvage_ok = sum(1 for r in salvaged if r.output is not None)
+    salvage_rate = salvage_ok / len(salvaged)
+    assert salvage_rate == 1.0, (
+        f"only {salvage_ok}/{len(salvaged)} salvaged requests completed")
+
+    # recovery wall: the failover event to the last salvaged retire
+    events = gw.trace_events()
+    fo_ts = next(e["ts"] for e in events if e["kind"] == "replica_failover")
+    retried_rids = {(e["replica"], e["rid"]) for e in events
+                    if e["kind"] == "replica_retry"}
+    recovery_wall = max(
+        (e["ts"] for e in events if e["kind"] == "retire"
+         and (e["replica"], e["rid"]) in retried_rids),
+        default=fo_ts) - fo_ts
+
+    tot = stats["totals"]
+    assert tot["requests_submitted"] == n_requests, (
+        "retries double-counted as logical submits")
+    assert tot["requests_completed"] == n_requests
+    assert tot["requests_retried"] == len(salvaged)
+
+    os.makedirs(os.path.dirname(TRACE_OUT), exist_ok=True)
+    gw.export_trace_jsonl(TRACE_OUT)
+
+    record = {
+        "arch": arch, "quick": quick, "n_requests": n_requests,
+        "replicas": 3, "killed_replica": KILLED,
+        "crash_at_step": CRASH_STEP,
+        "greedy_tie_eps": TIE_EPS,
+        "block_size": block, "max_seq_len": max_seq_len,
+        "max_slots": slots, "num_blocks": num_blocks,
+        "requests_completed": completed,
+        "failed_requests": failed,
+        "salvaged_requests": len(salvaged),
+        "salvage_success_rate": salvage_rate,
+        "retries": tot["requests_retried"],
+        "failovers": fleet["failovers"],
+        "bit_identical_outputs": bit_identical,
+        "wall_s": wall,
+        "recovery_wall_s": recovery_wall,
+        "health": fleet["health"],
+        "trace_out": TRACE_OUT,
+    }
+    from repro.serving.metrics import atomic_write_json
+    atomic_write_json(out_path, record)
+
+    rows = [
+        ("fault_tolerance/kill_1_of_3", wall * 1e6,
+         f"{n_requests} requests, {KILLED} crashed at step {CRASH_STEP}: "
+         f"{completed} completed, {failed} failed, "
+         f"{len(salvaged)} salvaged @ {salvage_rate:.0%}, "
+         f"bit-identical to fault-free oracle, results -> {out_path}"),
+        ("fault_tolerance/recovery", recovery_wall * 1e6,
+         f"failover -> last salvaged completion: {recovery_wall:.3f}s "
+         f"({tot['requests_retried']} retried), trace -> {TRACE_OUT}"),
+    ]
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, out_path=args.out)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

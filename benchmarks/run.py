@@ -121,6 +121,33 @@ def _check_bench_json() -> list:
             errors.append(f"{p}: zero completed requests")
         if p in ("BENCH_tracing.json", "BENCH_slo.json"):
             errors.extend(_check_overhead_bound(p, data, dicts))
+        if p == "BENCH_faults.json":
+            errors.extend(_check_faults(p, data))
+    return errors
+
+
+def _check_faults(p: str, data) -> list:
+    """The fault-tolerance artifact must prove the failover claim: the
+    kill salvaged work (not a no-op crash), every salvaged request
+    completed on a survivor, and nothing resolved to a typed failure."""
+    errors = []
+    for k in ("salvage_success_rate", "salvaged_requests",
+              "failed_requests", "failovers"):
+        if not isinstance(data.get(k), (int, float)):
+            errors.append(f"{p}: missing or non-numeric '{k}'")
+    if errors:
+        return errors
+    if data["salvaged_requests"] <= 0 or data["failovers"] <= 0:
+        errors.append(f"{p}: the injected kill salvaged nothing — the "
+                      f"crash landed after the burst finished")
+    if data["salvage_success_rate"] != 1.0:
+        errors.append(f"{p}: salvage_success_rate "
+                      f"{data['salvage_success_rate']} != 1.0 — salvaged "
+                      f"requests were lost")
+    if data["failed_requests"] != 0:
+        errors.append(f"{p}: {data['failed_requests']} request(s) "
+                      f"resolved to typed failures with survivors "
+                      f"available")
     return errors
 
 
@@ -159,7 +186,8 @@ def main() -> None:
     ap.add_argument("--only", help="comma list: scaling,overhead,ps,physics,"
                                    "roofline,kernels,serving,prefix_cache,"
                                    "paged_attention,batched_prefill,"
-                                   "interleaved,tracing,slo")
+                                   "interleaved,tracing,slo,"
+                                   "fault_tolerance")
     ap.add_argument("--check", action="store_true",
                     help="after running, validate every BENCH_*.json in "
                          "the cwd (bit_identical_outputs true where "
@@ -251,6 +279,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append(("slo_observatory/FAILED", 0.0, "see stderr"))
+    if want("fault_tolerance"):
+        from benchmarks import fault_tolerance
+        try:
+            rows += fault_tolerance.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("fault_tolerance/FAILED", 0.0, "see stderr"))
     if want("physics"):
         from benchmarks import physics_validation
         try:

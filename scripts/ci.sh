@@ -30,11 +30,18 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # invoked directly (not via benchmarks.run) so a failure fails the build
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.prefix_cache
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.paged_attention
-# --check exits nonzero on a FAILED row or an unhealthy BENCH_*.json
+# --check exits nonzero on a FAILED row or an unhealthy BENCH_*.json;
+# fault_tolerance kills 1 of 3 replicas mid-burst and asserts every
+# salvaged request completes bit-identical (salvage rate gated by
+# _check_faults on BENCH_faults.json)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
-    --only batched_prefill,interleaved,tracing,slo --check
+    --only batched_prefill,interleaved,tracing,slo,fault_tolerance --check
 # trace JSONL schema + report gate on the sample the tracing benchmark
 # just wrote: every event validates AND no report section (including the
 # requested SLO/profile ones) is empty
 python scripts/trace_report.py --slo --profile --validate \
     results/trace_sample.jsonl
+# same gate on the fault-tolerance trace: the failure-handling section
+# (health transitions, failovers, retries) must be populated
+python scripts/trace_report.py --faults --validate \
+    results/trace_faults.jsonl

@@ -16,8 +16,11 @@ Modes
     prefill-budget utilization per engine step.  ``--slo`` adds the
     per-tenant SLO section (TTFT / inter-token-gap percentiles derived
     from the events, plus every ``slo_breach``); ``--profile`` adds the
-    step-phase timing and ``recompile`` telemetry section.  ``--json
-    PATH`` additionally writes the whole report machine-readable.
+    step-phase timing and ``recompile`` telemetry section; ``--faults``
+    adds the failure-handling section (per-replica health transitions,
+    failovers with salvage counts, retries, terminal request failures,
+    and degradation edges).  ``--json PATH`` additionally writes the
+    whole report machine-readable.
 
     A section with zero matching events is reported as EMPTY with a
     warning (a trace that yields an empty report used to read as a
@@ -30,7 +33,7 @@ Modes
     and/or ``rid``, ``rid`` mandatory for request-scoped kinds.  Also
     fails (exit nonzero) when a core report section — request spans,
     engine steps — or an explicitly requested one (``--slo`` /
-    ``--profile``) is empty.
+    ``--profile`` / ``--faults``) is empty.
 """
 from __future__ import annotations
 
@@ -329,8 +332,88 @@ def profile_section(events: List[dict], top: int) -> dict:
     return data
 
 
+def faults_section(events: List[dict], top: int) -> dict:
+    """Failure-handling timeline: health transitions, failovers with
+    salvage counts, retries and terminal failures per replica, rejoins,
+    and degradation (overload) edges."""
+    health = [ev for ev in events if ev["kind"] == "replica_health"]
+    failovers = [ev for ev in events if ev["kind"] == "replica_failover"]
+    retries = [ev for ev in events if ev["kind"] == "replica_retry"]
+    rejoins = [ev for ev in events if ev["kind"] == "replica_rejoin"]
+    failed = [ev for ev in events if ev["kind"] == "request_failed"]
+    overloads = [ev for ev in events if ev["kind"] in ("overload_shed",
+                                                       "overload_cap")]
+    print("\n== faults / failover ==")
+    fault_events = (health + failovers + retries + rejoins + failed
+                    + overloads)
+    data: dict = {"fault_events": len(fault_events), "replicas": {},
+                  "transitions": [], "failed_requests": [],
+                  "overload": []}
+    if not fault_events:
+        print("  no fault-handling events recorded")
+        return data
+    per: Dict[str, Dict[str, int]] = defaultdict(
+        lambda: {"transitions": 0, "failovers": 0, "salvaged": 0,
+                 "retries_in": 0, "failed": 0, "rejoins": 0})
+    for ev in health:
+        per[ev.get("replica", "?")]["transitions"] += 1
+    for ev in failovers:
+        d = per[ev.get("replica", "?")]
+        d["failovers"] += 1
+        d["salvaged"] += (ev.get("salvaged_inflight", 0)
+                          + ev.get("salvaged_queued", 0))
+    for ev in retries:
+        # stamped with the replica that *received* the retried request
+        per[ev.get("replica", "?")]["retries_in"] += 1
+    for ev in rejoins:
+        per[ev.get("replica", "?")]["rejoins"] += 1
+    for ev in failed:
+        per[ev.get("replica", "?")]["failed"] += 1
+    print("  replica           transitions  failovers  salvaged  "
+          "retries-in  failed  rejoins")
+    for name in sorted(per):
+        d = per[name]
+        data["replicas"][name] = dict(d)
+        print(f"  {name:<16s} {d['transitions']:>12} {d['failovers']:>10}"
+              f" {d['salvaged']:>9} {d['retries_in']:>11}"
+              f" {d['failed']:>7} {d['rejoins']:>8}")
+    if health:
+        print(f"  {len(health)} health transition(s):")
+        for ev in health[:top]:
+            print(f"    {ev.get('replica', '?')}: {ev.get('old', '?')} -> "
+                  f"{ev.get('new', '?')} ({ev.get('reason', '?')})")
+        if len(health) > top:
+            print(f"    ... and {len(health) - top} more")
+    data["transitions"] = [{k: ev.get(k) for k in
+                            ("replica", "old", "new", "reason")}
+                           for ev in health]
+    for ev in failed[:top]:
+        print(f"    FAILED req{ev.get('rid', '?')} on "
+              f"{ev.get('replica', '?')}: {ev.get('reason', '?')} after "
+              f"{ev.get('attempts', '?')} attempt(s)")
+    data["failed_requests"] = [{k: ev.get(k) for k in
+                                ("replica", "rid", "reason", "attempts")}
+                               for ev in failed]
+    for ev in overloads[:top]:
+        if ev["kind"] == "overload_shed":
+            state = "RECOVERED" if ev.get("recovered") else "DEGRADED"
+            print(f"    {state}: {ev.get('reason', '?')} "
+                  f"(queue depth {ev.get('queue_depth', '?')})")
+        else:
+            print(f"    CAPPED req{ev.get('rid', '?')} "
+                  f"({ev.get('tenant', '?')}): max_new "
+                  f"{ev.get('orig_max_new', '?')} -> "
+                  f"{ev.get('capped_max_new', '?')}")
+    data["overload"] = [{k: ev.get(k) for k in
+                         ("kind", "reason", "recovered", "queue_depth",
+                          "tenant", "orig_max_new", "capped_max_new")}
+                        for ev in overloads]
+    return data
+
+
 def report(events: List[dict], top: int = 10, slo: bool = False,
-           profile: bool = False) -> Tuple[dict, List[str]]:
+           profile: bool = False,
+           faults: bool = False) -> Tuple[dict, List[str]]:
     """Print the text report; returns ``(machine-readable data, names of
     empty sections)``.  A section is *empty* when the trace held zero of
     the events it is built from — distinct from a healthy zero (e.g. no
@@ -363,6 +446,10 @@ def report(events: List[dict], top: int = 10, slo: bool = False,
         data["profile"] = profile_section(events, top)
         if not data["profile"]["phases"]:
             empty.append("profile")
+    if faults:
+        data["faults"] = faults_section(events, top)
+        if not data["faults"]["fault_events"]:
+            empty.append("faults")
     if empty:
         print(f"\nwarning: empty report section(s): {', '.join(empty)} — "
               "the trace had zero matching events "
@@ -380,6 +467,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="add the per-tenant SLO section")
     ap.add_argument("--profile", action="store_true",
                     help="add the step-phase / recompilation section")
+    ap.add_argument("--faults", action="store_true",
+                    help="add the failure-handling section (health "
+                         "transitions, failovers, retries, overload)")
     ap.add_argument("--json", type=Path, default=None, metavar="PATH",
                     help="also write the report machine-readable")
     ap.add_argument("--top", type=int, default=10,
@@ -399,7 +489,8 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"{path}: {n_events} events, "
                   f"{len(EVENT_KINDS)} known kinds: {status}")
         data, empty = report(load_events(path), top=args.top,
-                             slo=args.slo, profile=args.profile)
+                             slo=args.slo, profile=args.profile,
+                             faults=args.faults)
         all_data[str(path)] = data
         if args.validate and empty:
             print(f"{path}: FAIL — empty section(s): {', '.join(empty)}")

@@ -29,21 +29,36 @@ from repro.analysis.core import (Finding, LintContext, Module, Rule,
                                  attr_chain, register)
 
 
+def _literal_strings(value: ast.AST,
+                     assigned: "dict[str, Set[str]]") -> Set[str]:
+    """All string literals reachable from ``value``, resolving bare
+    ``Name`` references against previously-seen module-level frozenset
+    assignments — so ``EVENT_KINDS = frozenset({...}) | FAULT_EVENT_KINDS``
+    recovers the full union, not just the inline half."""
+    out: Set[str] = set()
+    for sub in ast.walk(value):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            out.add(sub.value)
+        elif isinstance(sub, ast.Name) and sub.id in assigned:
+            out.update(assigned[sub.id])
+    return out
+
+
 def _find_event_kinds(modules: List[Module]) -> Optional[Set[str]]:
     for mod in modules:
-        for node in ast.walk(mod.tree):
+        # walk top-level assigns in source order, accumulating each
+        # name's literal-string set so later unions can reference it
+        assigned: dict = {}
+        for node in mod.tree.body:
             if not isinstance(node, ast.Assign):
                 continue
-            if not any(isinstance(t, ast.Name) and t.id == "EVENT_KINDS"
-                       for t in node.targets):
-                continue
-            kinds: Set[str] = set()
-            for sub in ast.walk(node.value):
-                if isinstance(sub, ast.Constant) and \
-                        isinstance(sub.value, str):
-                    kinds.add(sub.value)
-            if kinds:
-                return kinds
+            strings = _literal_strings(node.value, assigned)
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    assigned[t.id] = strings
+        kinds = assigned.get("EVENT_KINDS")
+        if kinds:
+            return kinds
     return None
 
 

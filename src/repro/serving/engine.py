@@ -193,6 +193,9 @@ class ServingEngine:
         # replica); None until then — engine-side trace emission is
         # guarded so direct primitive use stays untraced
         self.tracer = None
+        # deterministic fault injection (serving/faults.py): bound by
+        # the scheduler alongside the tracer; None = no hooks fire
+        self.fault_injector = None
         # jit recompilation telemetry: each compiled program's argument
         # shape signature is reported per call; post-warm novelty is the
         # variable-batch shape-churn bug (serving/profiling.py)
@@ -440,6 +443,11 @@ class ServingEngine:
                     or spent == 0)
 
         try:
+            # fault hook INSIDE the all-or-nothing block: an injected
+            # prefill fault takes the same slot-release path a real
+            # engine error does, so the scheduler's requeue stays exact
+            if self.fault_injector is not None:
+                self.fault_injector.on_engine_op("prefill")
             working.sort(key=lambda c: c.seq)    # FIFO by begin order
             if self.paged:
                 Bp = self.prefill_batch
@@ -547,6 +555,10 @@ class ServingEngine:
         writes land in region the next prefill overwrites).  Returns
         logits (max_slots, V) **on device** — pass them straight to
         ``sample_tokens`` so the step costs one host sync, not two."""
+        if self.fault_injector is not None:
+            # before any state mutation: a decode-site fault leaves the
+            # cache untouched, so the scheduler can retry the same step
+            self.fault_injector.on_engine_op("decode")
         batch = {"tokens": jnp.asarray(tokens, jnp.int32)[:, None],
                  "positions": jnp.asarray(positions, jnp.int32),
                  "cache": self.kv.cache}

@@ -89,6 +89,13 @@ class ServingMetrics:
         self.requests_completed = 0
         self.total_new_tokens = 0
         self.finish_reason_counts: Dict[str, int] = {}
+        # fault tolerance: failover re-submissions land here instead of
+        # requests_submitted (one logical submit per request), terminal
+        # typed failures and load-shed rejections are separate outcomes
+        self.requests_retried = 0
+        self.requests_failed = 0
+        self.requests_shed = 0
+        self.failure_reason_counts: Dict[str, int] = {}
         self._first_submit_ts: Optional[float] = None
         self._last_finish_ts: Optional[float] = None
         # gauges: running aggregates (exact) — sampled on decode steps
@@ -137,15 +144,24 @@ class ServingMetrics:
             ts = self.tenants[tenant] = TenantStats(self.tenant_window)
         return ts
 
-    def record_submit(self, rid: int, tenant: str = "default") -> None:
+    def record_submit(self, rid: int, tenant: str = "default",
+                      retry: bool = False) -> None:
+        """``retry=True`` is a failover re-submission of a request this
+        *fleet* already counted: it gets a fresh timing entry (its queue
+        wait and serving span here are real) but increments
+        ``requests_retried`` instead of the logical submit counters, so
+        merged summaries count one submit per request."""
         now = self.clock()
         self._submit[rid] = now
-        self.requests_submitted += 1
+        if retry:
+            self.requests_retried += 1
+        else:
+            self.requests_submitted += 1
+            self._tenant(tenant).submitted += 1
         if self._first_submit_ts is None or now < self._first_submit_ts:
             self._first_submit_ts = now
         self._tenant_of[rid] = tenant
         t = self._tenant(tenant)
-        t.submitted += 1
         if t.first_submit_ts is None or now < t.first_submit_ts:
             t.first_submit_ts = now
 
@@ -213,6 +229,21 @@ class ServingMetrics:
                       self._tokens, self._reasons):
                 d.pop(old, None)
 
+    def record_failed(self, reason: str) -> None:
+        """Terminal typed failure: retry budget exhausted or no replica
+        left.  Failed requests never touch the completion counters or
+        the latency percentiles — they are a separate outcome."""
+        self.requests_failed += 1
+        self.failure_reason_counts[reason] = (
+            self.failure_reason_counts.get(reason, 0) + 1)
+
+    def record_shed(self, tenant: str) -> None:
+        """A submit was rejected (Overloaded) by the degradation
+        ladder; the request never entered any queue."""
+        self.requests_shed += 1
+        self.failure_reason_counts[f"shed:{tenant}"] = (
+            self.failure_reason_counts.get(f"shed:{tenant}", 0) + 1)
+
     def record_prefix(self, cached_tokens: int, prompt_tokens: int) -> None:
         """One admission's prefix-cache outcome: how many of the prompt's
         tokens were served from the store instead of recomputed."""
@@ -279,6 +310,11 @@ class ServingMetrics:
                if self._queue_samples else 0.0)
         return {
             "requests_completed": self.requests_completed,
+            "requests_submitted": self.requests_submitted,
+            "requests_retried": self.requests_retried,
+            "requests_failed": self.requests_failed,
+            "requests_shed": self.requests_shed,
+            "failure_reasons": dict(self.failure_reason_counts),
             "total_new_tokens": self.total_new_tokens,
             "tokens_per_s": (self.total_new_tokens / span
                              if span > 0 else 0.0),
@@ -410,6 +446,16 @@ def merge_summaries(summaries: List[Dict[str, object]]) -> Dict[str, object]:
         "replicas": len(summaries),
         "requests_completed": sum(s.get("requests_completed", 0)
                                   for s in summaries),
+        # fault-tolerance outcomes: a retried request contributed one
+        # requests_submitted (on its first replica) and one retry per
+        # re-route — summing keeps the one-logical-submit invariant
+        "requests_submitted": sum(s.get("requests_submitted", 0)
+                                  for s in summaries),
+        "requests_retried": sum(s.get("requests_retried", 0)
+                                for s in summaries),
+        "requests_failed": sum(s.get("requests_failed", 0)
+                               for s in summaries),
+        "requests_shed": sum(s.get("requests_shed", 0) for s in summaries),
         "total_new_tokens": total_tokens,
         "tokens_per_s": sum(s.get("tokens_per_s", 0.0) for s in summaries),
         "decode_steps": sum(s.get("decode_steps", 0) for s in summaries),

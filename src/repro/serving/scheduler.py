@@ -112,9 +112,16 @@ class Scheduler:
                  max_admissions_per_step: Optional[int] = None,
                  prefill_token_budget: Optional[int] = None,
                  tracer: Optional[Tracer] = None,
-                 profile: bool = False):
+                 profile: bool = False,
+                 fault_injector=None):
         self.engine = engine
         self.max_slots = engine.max_slots
+        # deterministic fault injection (tests/chaos harness): the
+        # injector fires at the top of step() and inside the engine's
+        # prefill/decode ops; None (the default) costs one attribute
+        # check per step
+        self.fault_injector = fault_injector
+        engine.fault_injector = fault_injector
         # cap on requests admitted per scheduler step (None = drain all
         # that fit).  1 reproduces the old one-at-a-time admission — the
         # benchmark baseline — and smooths decode latency under bursts.
@@ -175,8 +182,18 @@ class Scheduler:
 
     # -- submission ----------------------------------------------------------
 
-    def submit(self, request: Request) -> int:
-        if self.draining:
+    def submit(self, request: Request, *,
+               resume_emitted: Optional[List[int]] = None,
+               retry: bool = False,
+               admit_while_draining: bool = False) -> int:
+        """Queue a request.  The keyword knobs exist for gateway
+        failover: ``resume_emitted`` seeds the request with tokens it
+        already emitted on a failed replica (it re-prefills prompt +
+        emitted[:-1] exactly like a recompute-preemption resume),
+        ``retry=True`` records a retry instead of a second logical
+        submit, and ``admit_while_draining`` lets a draining gateway
+        re-home salvaged work past this scheduler's closed admission."""
+        if self.draining and not admit_while_draining:
             raise RuntimeError("scheduler is draining; admission closed")
         if len(request.prompt) == 0:
             raise ValueError(
@@ -197,8 +214,15 @@ class Scheduler:
                 "never be scheduled even alone")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(_ReqState(rid, request))
-        self.tracer.submit(rid, request.tenant)
+        st = _ReqState(rid, request)
+        if resume_emitted:
+            # salvage resume: the emitted tokens ride the recompute-
+            # preemption path — _collect_batch re-prefills prompt +
+            # emitted[:-1] and the span reads resumed=True
+            st.emitted = [int(t) for t in resume_emitted]
+            st.admitted_before = True
+        self.queue.append(st)
+        self.tracer.submit(rid, request.tenant, retry=retry)
         return rid
 
     @property
@@ -528,6 +552,13 @@ class Scheduler:
         durations (admission / prefill-advance / decode dispatch /
         sample+retire) and a gauges snapshot, so a stalled request can
         be read against what the engine was actually doing that step."""
+        fi = self.fault_injector
+        if fi is not None and fi.on_step() == "stall":
+            # injected wedge: claim liveness, do nothing.  This is the
+            # capsule that hangs without exiting — return-value-based
+            # progress checks are satisfied, only the gateway's
+            # progress-signature watchdog can tell
+            return True
         tr = self.tracer
         prof = self.profiler
         t0 = tr.clock()
@@ -606,6 +637,48 @@ class Scheduler:
         """Graceful drain: close admission, finish all in-flight work."""
         self.draining = True
         self.run()
+
+    def abort(self) -> List[_ReqState]:
+        """Failover salvage: cancel every in-flight cursor, free every
+        live slot, release every prefix pin, close admission, and return
+        the orphaned request states — in-flight first (oldest admission
+        first), then queue order — so a gateway can re-route them with
+        their emitted-so-far tokens (the recompute-preemption resume).
+
+        Engine-side frees are best-effort: a crashed capsule's pool dies
+        with the process anyway, but the request-side bookkeeping (the
+        states, their emitted tokens) must survive regardless."""
+        pc = self.prefix_cache
+        inflight = sorted(list(self.prefilling.values())
+                          + list(self.active.values()),
+                          key=lambda s: s.admit_seq)
+        mid_prefill_slots = set(self.prefilling)
+        salvaged: List[_ReqState] = []
+        for st in inflight:
+            try:
+                if st.slot in mid_prefill_slots:
+                    self.engine.cancel_prefill(st.slot)
+                else:
+                    self.engine.free_slot(st.slot)
+            except Exception:   # noqa: BLE001 — dead capsule: its pool
+                pass            # died with it; nothing left to free
+            if pc is not None and st.prefix_blocks:
+                try:
+                    pc.release(st.prefix_blocks)
+                except Exception:   # noqa: BLE001 — same: best-effort
+                    pass
+            st.prefix_blocks = []
+            self.tracer.unbind_slot(st.slot)
+            st.slot = -1
+            st.cached_len = 0
+            st.inflight_seq = None
+            salvaged.append(st)
+        self.prefilling.clear()
+        self.active.clear()
+        salvaged.extend(self.queue)
+        self.queue.clear()
+        self.draining = True
+        return salvaged
 
     # -- results -------------------------------------------------------------
 

@@ -70,6 +70,20 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence
 from repro.serving.metrics import ServingMetrics
 from repro.serving.slo import SLOMonitor
 
+# Fault-tolerance vocabulary (PR 9): replica membership transitions,
+# failover/retry bookkeeping, and the degradation ladder.  Split out so
+# ``scripts/trace_report.py --faults`` and the lint rule can name the
+# family; unioned into EVENT_KINDS below.
+FAULT_EVENT_KINDS = frozenset({
+    "replica_health",    # health state transition (edge-triggered)
+    "replica_failover",  # a dead/quarantined replica's work was salvaged
+    "replica_retry",     # one salvaged request re-submitted elsewhere
+    "replica_rejoin",    # quarantine exit: capsule relaunched, cache warm
+    "request_failed",    # typed terminal failure (retry budget exhausted)
+    "overload_shed",     # degradation ladder engaged/released (edge)
+    "overload_cap",      # a request's max_new_tokens capped under load
+})
+
 # The documented event enum.  ``scripts/trace_report.py --validate``
 # imports this set: an event whose ``kind`` is not listed here fails the
 # schema check, so growing the vocabulary is an explicit, reviewed act.
@@ -98,7 +112,7 @@ EVENT_KINDS = frozenset({
     # observatory (PR 7): SLO + compilation telemetry
     "slo_breach",        # a tenant's policy check changed state
     "recompile",         # a jitted program saw a novel shape signature
-})
+}) | FAULT_EVENT_KINDS
 
 # kinds that must carry a request id (the rest are step-scoped;
 # prefill_advance / block events resolve rids through slot bindings and
@@ -106,6 +120,7 @@ EVENT_KINDS = frozenset({
 _RID_KINDS = frozenset({
     "submit", "route", "prefix_probe", "admit",
     "first_token", "decode", "preempt", "retire",
+    "replica_retry", "request_failed", "overload_cap",
 })
 
 DEFAULT_BUFFER_EVENTS = 65536
@@ -169,10 +184,19 @@ class Tracer:
 
     # -- request lifecycle (metrics-feeding sites first) ---------------------
 
-    def submit(self, rid: int, tenant: str = "default") -> None:
-        self.metrics.record_submit(rid, tenant)
+    def submit(self, rid: int, tenant: str = "default",
+               retry: bool = False) -> None:
+        """``retry=True`` marks a failover re-submission: the metrics
+        record a retry counter instead of a second logical submit, so
+        merged fleet summaries count the request once (the ``retry``
+        flag is only stamped on retry events, keeping pre-existing
+        traces byte-identical)."""
+        self.metrics.record_submit(rid, tenant, retry=retry)
         if self.enabled:
-            self._emit("submit", rid, tenant=tenant)
+            if retry:
+                self._emit("submit", rid, tenant=tenant, retry=True)
+            else:
+                self._emit("submit", rid, tenant=tenant)
 
     def first_token(self, rid: int) -> None:
         self.metrics.record_first_token(rid)
@@ -304,6 +328,75 @@ class Tracer:
             self._emit("recompile", program=program, signature=signature,
                        compiles=compiles, post_warm=post_warm)
 
+    # -- fault tolerance (PR 9) ----------------------------------------------
+
+    def replica_health(self, replica: str, old: str, new: str,
+                       reason: str, consecutive_bad: int) -> None:
+        """One edge-triggered membership transition (HEALTHY ->
+        DEGRADED -> QUARANTINED / DEAD and back)."""
+        if self.enabled:
+            self._emit("replica_health", replica=replica, old=old,
+                       new=new, reason=reason,
+                       consecutive_bad=consecutive_bad)
+
+    def failover(self, replica: str, salvaged_inflight: int,
+                 salvaged_queued: int, reason: str) -> None:
+        """A replica left the routable set and the gateway harvested
+        its queued + in-flight requests for re-routing."""
+        if self.enabled:
+            self._emit("replica_failover", replica=replica,
+                       salvaged_inflight=salvaged_inflight,
+                       salvaged_queued=salvaged_queued, reason=reason)
+
+    def retry(self, rid: int, attempt: int, backoff_steps: int,
+              prev_replica: str) -> None:
+        """One salvaged request re-submitted on this replica (``rid`` is
+        its rid *here*; the submit/finish counters are handled by
+        ``submit(retry=True)``, this is the trace-side marker)."""
+        if self.enabled:
+            self._emit("replica_retry", rid, attempt=attempt,
+                       backoff_steps=backoff_steps,
+                       prev_replica=prev_replica)
+
+    def rejoin(self, replica: str, rejoins: int,
+               warm_prefix_blocks: int) -> None:
+        """Quarantine exit: the capsule relaunched; its engine-held
+        prefix cache survived, so re-routed prompts probe warm."""
+        if self.enabled:
+            self._emit("replica_rejoin", replica=replica, rejoins=rejoins,
+                       warm_prefix_blocks=warm_prefix_blocks)
+
+    def request_failed(self, rid: int, reason: str, attempts: int) -> None:
+        """Terminal typed failure: the request exhausted its retry
+        budget (or had no replica left).  Feeds the failure counters —
+        a failed request is *not* a completed one."""
+        self.metrics.record_failed(reason)
+        if self.enabled:
+            self._emit("request_failed", rid, reason=reason,
+                       attempts=attempts)
+
+    def shed(self, tenant: str) -> None:
+        """A submit was rejected (``Overloaded``) while degraded.  There
+        is no rid (admission never happened) so this is metrics-only."""
+        self.metrics.record_shed(tenant)
+
+    def overload(self, active: bool, reason: str,
+                 queue_depth: int) -> None:
+        """Degradation-ladder edge: engaged (``active=True``) or
+        released.  One event per transition, like ``slo_breach``."""
+        if self.enabled:
+            self._emit("overload_shed", active=active, reason=reason,
+                       queue_depth=queue_depth, recovered=not active)
+
+    def overload_cap(self, rid: int, tenant: str, orig_max_new: int,
+                     capped_max_new: int) -> None:
+        """An over-budget tenant's request had max_new_tokens capped
+        while the fleet was degraded."""
+        if self.enabled:
+            self._emit("overload_cap", rid, tenant=tenant,
+                       orig_max_new=orig_max_new,
+                       capped_max_new=capped_max_new)
+
     # -- engine timeline -----------------------------------------------------
 
     def engine_step(self, *, decoded: bool, queue_depth: int, active: int,
@@ -422,9 +515,14 @@ def to_chrome_trace(events_by_replica: Mapping[str, Sequence[Mapping]]
                             "args": args})
             out.append({**base, "ph": "e", "ts": us(revs[-1]["ts"])})
         for ev in evs:
-            if ev["kind"] in ("slo_breach", "recompile"):
+            if ev["kind"] in ("slo_breach", "recompile", "replica_health",
+                              "replica_failover", "replica_rejoin",
+                              "overload_shed"):
                 # step-scoped warnings: instants on the engine thread so
                 # they line up with the phase slices they interrupt
+                # (rid-carrying fault kinds — replica_retry,
+                # request_failed, overload_cap — flow into their request
+                # lanes via the span builder above instead)
                 out.append({"ph": "i", "s": "t", "cat": "observatory",
                             "name": ev["kind"], "pid": pid, "tid": 1,
                             "ts": us(ev["ts"]),

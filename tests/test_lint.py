@@ -267,6 +267,24 @@ def test_rl004_recovers_event_kinds_from_tree(tmp_path):
     assert "'dcode'" in res.findings[0].message
 
 
+def test_rl004_recovers_event_kinds_union(tmp_path):
+    # the real tracing.py now builds EVENT_KINDS as a union of an inline
+    # frozenset and a named one — recovery must resolve the Name half
+    (tmp_path / "serving").mkdir()
+    (tmp_path / "serving" / "tracing.py").write_text(
+        'FAULT_EVENT_KINDS = frozenset({"replica_health"})\n'
+        'EVENT_KINDS = frozenset({"decode"}) | FAULT_EVENT_KINDS\n'
+        'class T:\n'
+        '    def go(self, rid):\n'
+        '        self._emit("decode", rid=rid)\n'
+        '        self._emit("replica_health", rid=rid)\n'
+        '        self._emit("dcode", rid=rid)\n')
+    rules = [r for r in all_rules() if r.rule_id == "RL004"]
+    res = lint_paths([tmp_path], root=tmp_path, rules=rules)
+    assert len(res.findings) == 1
+    assert "'dcode'" in res.findings[0].message
+
+
 def test_rl004_ignores_files_outside_serving(tmp_path):
     res = _lint_snippet(tmp_path, RL004_POS, rule="RL004",
                         name="models/mod.py", event_kinds={"decode"})
