@@ -1,0 +1,204 @@
+"""Fabric benchmark: 3 *subprocess* replicas, SIGKILL one mid-burst.
+
+The cross-process version of the PR 9 fleet claim, measured end to end
+over the real transport: three replica workers launched as separate
+processes by :class:`~repro.serving.fabric.backends.LocalProcessBackend`,
+talking to the gateway only through the shared-filesystem mailbox, serve
+a greedy burst; one worker is SIGKILLed while its heartbeat shows
+in-flight requests.  The gateway observes the death exactly as a real
+cluster would (the process vanishes, heartbeats stop), salvages the
+victim's queued + in-flight work from its last heartbeat's emitted-token
+map, re-routes to the survivors — and **every** request still completes
+bit-identical to a fault-free single-process oracle run.
+
+Written to ``BENCH_fabric.json`` (validated by ``benchmarks/run.py
+--check`` with the same schema as the fault-tolerance artifact):
+
+* ``requests_completed == n_requests`` and ``failed_requests == 0``;
+* ``salvage_success_rate == 1.0`` — every salvaged request completed on
+  a surviving process;
+* ``bit_identical_outputs`` — fleet-under-kill outputs equal the
+  oracle's, token for token, across the process boundary;
+* the merged gateway + worker trace timeline is exported to
+  ``results/trace_fabric.jsonl`` for ``scripts/trace_report.py
+  --fleet``.
+
+  PYTHONPATH=src python -m benchmarks.fabric          # smoke
+  PYTHONPATH=src python -m benchmarks.fabric --full
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+KILLED_IDX = 1
+MAX_NEW = 16
+TRACE_OUT = os.path.join("results", "trace_fabric.jsonl")
+
+
+def _workload(vocab_size, n):
+    import numpy as np
+
+    from repro.serving import Request, SamplingParams
+    rng = np.random.default_rng(11)
+    return [Request(rng.integers(0, vocab_size,
+                                 int(rng.integers(3, 10)), dtype=np.int32),
+                    SamplingParams(max_new_tokens=MAX_NEW, greedy=True))
+            for _ in range(n)]
+
+
+def run(quick: bool = True, out_path: str = "BENCH_fabric.json"):
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.serving import (HealthConfig, LocalProcessBackend,
+                               RequestFailed, Scheduler,
+                               collect_fabric_traces,
+                               launch_fabric_replicas, shutdown_fabric)
+    from repro.serving.fabric import build_engine
+    from repro.serving.health import DEAD
+
+    n_requests = 12 if quick else 18
+    cfg = get_smoke_config("qwen2-0.5b")
+    reqs = _workload(cfg.vocab_size, n_requests)
+
+    # fault-free oracle: the same workload on one in-process scheduler
+    # built from the same declarative model spec the workers rebuild —
+    # bit-identity across the process boundary is the claim under test
+    oracle_sched = Scheduler(build_engine(None))
+    oracle_rids = [oracle_sched.submit(r) for r in reqs]
+    oracle_sched.run()
+    oracle = [oracle_sched.output(r) for r in oracle_rids]
+
+    spool = Path(tempfile.mkdtemp(prefix="fabric-bench-")) / "spool"
+    backend = LocalProcessBackend()
+    gw = launch_fabric_replicas(
+        3, backend, spool, tracing=True,
+        health=HealthConfig(degraded_after=20, quarantine_after=40,
+                            auto_rejoin=False))
+    try:
+        t0 = time.perf_counter()
+        handles = [gw.submit(r) for r in reqs]
+        victim = gw.replicas[KILLED_IDX].scheduler
+        killed_name = gw.replicas[KILLED_IDX].name
+
+        # step until the victim's heartbeat shows in-flight work, then
+        # SIGKILL it — the kill must land squarely mid-burst, with both
+        # admitted decodes and queued submits on the dying process
+        killed = False
+        for _ in range(200):
+            gw.step()
+            if victim.active or victim.prefilling:
+                backend.kill(victim.handle)
+                killed = True
+                break
+        assert killed, ("the victim never reported in-flight work — "
+                        "the burst finished before the kill could land")
+        gw.drain()
+        wall = time.perf_counter() - t0
+
+        assert gw.health[KILLED_IDX].state == DEAD, (
+            "the SIGKILLed worker was never declared dead")
+        stats = gw.stats()
+        fleet = stats["fleet"]
+        assert fleet["failovers"] >= 1
+
+        completed = failed = 0
+        bit_identical = True
+        for h, ref in zip(handles, oracle):
+            out = gw.result(h)
+            if isinstance(out, RequestFailed):
+                failed += 1
+                continue
+            completed += 1
+            if not np.array_equal(out, ref):
+                bit_identical = False
+        assert completed == n_requests, (
+            f"{n_requests - completed} request(s) lost to the kill")
+        assert failed == 0
+        assert bit_identical, ("cross-process failover changed greedy "
+                               "outputs")
+
+        salvaged = [r for r in gw._requests.values() if r.attempts > 0]
+        assert salvaged, ("the kill salvaged nothing — it landed after "
+                          "the victim went idle")
+        salvage_ok = sum(1 for r in salvaged if r.output is not None)
+        salvage_rate = salvage_ok / len(salvaged)
+        assert salvage_rate == 1.0, (
+            f"only {salvage_ok}/{len(salvaged)} salvaged requests "
+            f"completed")
+
+        # recovery wall: the failover event to the last salvaged retire
+        events = gw.trace_events()
+        fo_ts = next(e["ts"] for e in events
+                     if e["kind"] == "replica_failover")
+        retried = {(e["replica"], e["rid"]) for e in events
+                   if e["kind"] == "replica_retry"}
+        recovery_wall = max(
+            (e["ts"] for e in events if e["kind"] == "retire"
+             and (e["replica"], e["rid"]) in retried),
+            default=fo_ts) - fo_ts
+
+        # stop the survivors before collecting: workers export their
+        # trace streams (engine steps included) at clean exit, and the
+        # merged fleet timeline should carry them — the SIGKILLed
+        # worker is the one stream legitimately missing
+        shutdown_fabric(gw)
+        os.makedirs(os.path.dirname(TRACE_OUT), exist_ok=True)
+        n_events = collect_fabric_traces(gw, spool, TRACE_OUT)
+
+        record = {
+            "arch": "qwen2-0.5b", "quick": quick,
+            "n_requests": n_requests, "replicas": 3,
+            "backend": "LocalProcessBackend",
+            "killed_replica": killed_name,
+            "requests_completed": completed,
+            "failed_requests": failed,
+            "salvaged_requests": len(salvaged),
+            "salvage_success_rate": salvage_rate,
+            "failovers": fleet["failovers"],
+            "bit_identical_outputs": bit_identical,
+            "wall_s": wall,
+            "recovery_wall_s": recovery_wall,
+            "health": fleet["health"],
+            "trace_events": n_events,
+            "trace_out": TRACE_OUT,
+        }
+        from repro.serving.metrics import atomic_write_json
+        atomic_write_json(out_path, record)
+
+        rows = [
+            ("fabric/kill_1_of_3_processes", wall * 1e6,
+             f"{n_requests} requests over 3 subprocess replicas, "
+             f"{killed_name} SIGKILLed mid-burst: {completed} completed, "
+             f"{failed} failed, {len(salvaged)} salvaged @ "
+             f"{salvage_rate:.0%}, bit-identical to in-process oracle, "
+             f"results -> {out_path}"),
+            ("fabric/recovery", recovery_wall * 1e6,
+             f"failover -> last salvaged completion: "
+             f"{recovery_wall:.3f}s, merged trace ({n_events} events) "
+             f"-> {TRACE_OUT}"),
+        ]
+        return rows
+    finally:
+        shutdown_fabric(gw)
+        shutil.rmtree(spool.parent, ignore_errors=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_fabric.json")
+    args = ap.parse_args()
+    rows = run(quick=not args.full, out_path=args.out)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

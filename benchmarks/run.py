@@ -121,15 +121,16 @@ def _check_bench_json() -> list:
             errors.append(f"{p}: zero completed requests")
         if p in ("BENCH_tracing.json", "BENCH_slo.json"):
             errors.extend(_check_overhead_bound(p, data, dicts))
-        if p == "BENCH_faults.json":
+        if p in ("BENCH_faults.json", "BENCH_fabric.json"):
             errors.extend(_check_faults(p, data))
     return errors
 
 
 def _check_faults(p: str, data) -> list:
-    """The fault-tolerance artifact must prove the failover claim: the
-    kill salvaged work (not a no-op crash), every salvaged request
-    completed on a survivor, and nothing resolved to a typed failure."""
+    """The fault-tolerance and fabric artifacts must prove the failover
+    claim: the kill salvaged work (not a no-op crash), every salvaged
+    request completed on a survivor, and nothing resolved to a typed
+    failure."""
     errors = []
     for k in ("salvage_success_rate", "salvaged_requests",
               "failed_requests", "failovers"):
@@ -187,7 +188,7 @@ def main() -> None:
                                    "roofline,kernels,serving,prefix_cache,"
                                    "paged_attention,batched_prefill,"
                                    "interleaved,tracing,slo,"
-                                   "fault_tolerance")
+                                   "fault_tolerance,fabric")
     ap.add_argument("--check", action="store_true",
                     help="after running, validate every BENCH_*.json in "
                          "the cwd (bit_identical_outputs true where "
@@ -286,6 +287,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             rows.append(("fault_tolerance/FAILED", 0.0, "see stderr"))
+    if want("fabric"):
+        from benchmarks import fabric
+        try:
+            rows += fabric.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            rows.append(("fabric/FAILED", 0.0, "see stderr"))
     if want("physics"):
         from benchmarks import physics_validation
         try:

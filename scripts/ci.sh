@@ -33,9 +33,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.paged_attention
 # --check exits nonzero on a FAILED row or an unhealthy BENCH_*.json;
 # fault_tolerance kills 1 of 3 replicas mid-burst and asserts every
 # salvaged request completes bit-identical (salvage rate gated by
-# _check_faults on BENCH_faults.json)
+# _check_faults on BENCH_faults.json); fabric repeats the claim across
+# real process boundaries — 3 subprocess workers over the mailbox
+# transport, one SIGKILLed mid-burst (same gate, BENCH_fabric.json)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
-    --only batched_prefill,interleaved,tracing,slo,fault_tolerance --check
+    --only batched_prefill,interleaved,tracing,slo,fault_tolerance,fabric \
+    --check
 # trace JSONL schema + report gate on the sample the tracing benchmark
 # just wrote: every event validates AND no report section (including the
 # requested SLO/profile ones) is empty
@@ -45,3 +48,7 @@ python scripts/trace_report.py --slo --profile --validate \
 # (health transitions, failovers, retries) must be populated
 python scripts/trace_report.py --faults --validate \
     results/trace_faults.jsonl
+# fleet gate on the merged cross-process fabric trace: per-replica
+# worker streams plus the gateway's failover timeline must be populated
+python scripts/trace_report.py --fleet --validate \
+    results/trace_fabric.jsonl

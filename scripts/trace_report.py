@@ -19,8 +19,10 @@ Modes
     step-phase timing and ``recompile`` telemetry section; ``--faults``
     adds the failure-handling section (per-replica health transitions,
     failovers with salvage counts, retries, terminal request failures,
-    and degradation edges).  ``--json PATH`` additionally writes the
-    whole report machine-readable.
+    and degradation edges); ``--fleet`` adds the per-replica rollup for
+    merged cross-process fabric traces (one stream per worker process,
+    clocks per-process monotonic).  ``--json PATH`` additionally writes
+    the whole report machine-readable.
 
     A section with zero matching events is reported as EMPTY with a
     warning (a trace that yields an empty report used to read as a
@@ -411,9 +413,64 @@ def faults_section(events: List[dict], top: int) -> dict:
     return data
 
 
+def fleet_section(events: List[dict], top: int) -> dict:
+    """Per-replica rollup of a merged cross-process fabric trace: each
+    worker exports its own stream (per-process monotonic clock, so spans
+    are only meaningful within a replica) and the gateway contributes
+    the failover timeline.  One row per replica — events, requests,
+    completions, decode steps, failovers and retries received — plus the
+    gateway's cross-replica failure counts."""
+    per: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"events": 0, "requests": 0, "completed": 0,
+                 "engine_steps": 0, "failovers": 0, "retries_in": 0,
+                 "health_transitions": 0, "span_ms": 0.0})
+    ts_range: Dict[str, List[float]] = defaultdict(list)
+    for ev in events:
+        name = ev.get("replica", "")
+        d = per[name]
+        d["events"] += 1
+        ts_range[name].append(ev["ts"])
+        k = ev["kind"]
+        if k == "submit":
+            d["requests"] += 1
+        elif k == "retire":
+            d["completed"] += 1
+        elif k == "engine_step":
+            d["engine_steps"] += 1
+        elif k == "replica_failover":
+            d["failovers"] += 1
+        elif k == "replica_retry":
+            d["retries_in"] += 1
+        elif k == "replica_health":
+            d["health_transitions"] += 1
+    print("\n== fleet (per replica; clocks are per-process) ==")
+    data: dict = {"replicas": {}, "failovers": 0, "retries": 0}
+    if not per:
+        print("  no replica-stamped events recorded")
+        return data
+    print("  replica           events  reqs  done  steps  failovers  "
+          "retries-in  health  span ms")
+    for name in sorted(per):
+        d = per[name]
+        tss = ts_range[name]
+        d["span_ms"] = (max(tss) - min(tss)) * 1e3 if tss else 0.0
+        data["replicas"][name or "(unstamped)"] = dict(d)
+        data["failovers"] += int(d["failovers"])
+        data["retries"] += int(d["retries_in"])
+        print(f"  {name or '(unstamped)':<16s} {int(d['events']):>7}"
+              f" {int(d['requests']):>5} {int(d['completed']):>5}"
+              f" {int(d['engine_steps']):>6} {int(d['failovers']):>10}"
+              f" {int(d['retries_in']):>11} {int(d['health_transitions']):>7}"
+              f" {d['span_ms']:>8.1f}")
+    print(f"  fleet: {len(per)} replica stream(s), "
+          f"{data['failovers']} failover(s), "
+          f"{data['retries']} retried request(s) received")
+    return data
+
+
 def report(events: List[dict], top: int = 10, slo: bool = False,
-           profile: bool = False,
-           faults: bool = False) -> Tuple[dict, List[str]]:
+           profile: bool = False, faults: bool = False,
+           fleet: bool = False) -> Tuple[dict, List[str]]:
     """Print the text report; returns ``(machine-readable data, names of
     empty sections)``.  A section is *empty* when the trace held zero of
     the events it is built from — distinct from a healthy zero (e.g. no
@@ -450,6 +507,10 @@ def report(events: List[dict], top: int = 10, slo: bool = False,
         data["faults"] = faults_section(events, top)
         if not data["faults"]["fault_events"]:
             empty.append("faults")
+    if fleet:
+        data["fleet"] = fleet_section(events, top)
+        if not data["fleet"]["replicas"]:
+            empty.append("fleet")
     if empty:
         print(f"\nwarning: empty report section(s): {', '.join(empty)} — "
               "the trace had zero matching events "
@@ -470,6 +531,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--faults", action="store_true",
                     help="add the failure-handling section (health "
                          "transitions, failovers, retries, overload)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="add the per-replica fleet section for merged "
+                         "cross-process fabric traces")
     ap.add_argument("--json", type=Path, default=None, metavar="PATH",
                     help="also write the report machine-readable")
     ap.add_argument("--top", type=int, default=10,
@@ -490,7 +554,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                   f"{len(EVENT_KINDS)} known kinds: {status}")
         data, empty = report(load_events(path), top=args.top,
                              slo=args.slo, profile=args.profile,
-                             faults=args.faults)
+                             faults=args.faults, fleet=args.fleet)
         all_data[str(path)] = data
         if args.validate and empty:
             print(f"{path}: FAIL — empty section(s): {', '.join(empty)}")

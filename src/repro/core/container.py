@@ -25,6 +25,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import hashlib
+import inspect
 import io
 import json
 import os
@@ -216,11 +217,20 @@ def unpack(archive: Path, dest_root: Path,
     with tarfile.open(archive, "r:gz") as tar:
         manifest = json.loads(tar.extractfile("image/manifest.json").read())
         if dest.exists():
-            old = json.loads((dest / "image/manifest.json").read_text())
-            if old["content_hash"] != manifest["content_hash"]:
+            # a crashed prior ch-tar2dir leaves a partial tree: a missing
+            # or unparseable manifest is indistinguishable from a foreign
+            # image, so it gets the same refusal instead of a raw
+            # FileNotFoundError / JSONDecodeError
+            try:
+                old = json.loads((dest / "image/manifest.json").read_text())
+                old_hash = old["content_hash"]
+            except (OSError, ValueError, KeyError):
+                old_hash = None
+            if old_hash != manifest["content_hash"]:
                 raise SecurityError(
-                    f"{dest} holds a different image (hash mismatch); "
-                    "refusing to overwrite — remove it explicitly first")
+                    f"{dest} holds a different or partially unpacked image "
+                    "(hash mismatch); refusing to overwrite — remove it "
+                    "explicitly first")
             shutil.rmtree(dest)
         dest.mkdir(parents=True)
         tar.extractall(dest, filter="data")
@@ -244,6 +254,40 @@ def _tree_hash(root: Path) -> str:
 _SCRUBBED = ("LD_PRELOAD", "LD_LIBRARY_PATH", "PYTHONPATH_HOST",
              "http_proxy", "https_proxy", "HTTP_PROXY", "HTTPS_PROXY",
              "SSH_AUTH_SOCK")
+
+# Live capsule frames, in entry order.  The old save/clear/restore of the
+# whole process environment corrupted it as soon as two capsule runs
+# interleaved (A enters, B enters, A's exit restores a snapshot that
+# resurrects B's scrubbed vars and drops B's capsule vars).  Instead each
+# run owns a composed per-run env *frame*; os.environ is rebuilt from the
+# host baseline plus the live frames on every entry/exit, so any exit
+# order converges and the last exit restores the host env exactly.
+_ACTIVE_FRAMES: List[Dict[str, str]] = []
+_HOST_BASELINE: Optional[Dict[str, str]] = None
+
+
+def _apply_frames() -> None:
+    global _HOST_BASELINE
+    if _HOST_BASELINE is None:
+        return
+    merged = dict(_HOST_BASELINE)
+    if _ACTIVE_FRAMES:
+        for k in _SCRUBBED:
+            merged.pop(k, None)
+        for frame in _ACTIVE_FRAMES:
+            merged.update(frame)
+    os.environ.clear()
+    os.environ.update(merged)
+    if not _ACTIVE_FRAMES:
+        _HOST_BASELINE = None
+
+
+def _accepts_capsule_env(fn: Callable[..., Any]) -> bool:
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    return "capsule_env" in params
 
 
 @dataclass
@@ -274,22 +318,33 @@ class CapsuleRuntime:
         self.policy.admit(RUNTIME_PROFILES["charliecloud"])
         self.context = context
 
+    @staticmethod
+    def compose_env(image_dir: Path, manifest: Dict[str, Any],
+                    extra_env: Optional[Dict[str, str]] = None
+                    ) -> Dict[str, str]:
+        """The per-run capsule environment as a plain dict — what ch-run
+        would hand the contained process."""
+        env = {"REPRO_CAPSULE": manifest["name"],
+               "REPRO_CAPSULE_ROOT": str(image_dir),
+               "REPRO_NO_NETWORK": "1"}
+        env.update(manifest.get("env", {}))
+        env.update(extra_env or {})
+        return env
+
     @contextlib.contextmanager
     def _capsule_env(self, image_dir: Path, manifest: Dict[str, Any],
                      extra_env: Optional[Dict[str, str]]):
-        saved = dict(os.environ)
+        global _HOST_BASELINE
+        frame = self.compose_env(image_dir, manifest, extra_env)
+        if not _ACTIVE_FRAMES:
+            _HOST_BASELINE = dict(os.environ)
+        _ACTIVE_FRAMES.append(frame)
+        _apply_frames()
         try:
-            for k in _SCRUBBED:
-                os.environ.pop(k, None)
-            os.environ["REPRO_CAPSULE"] = manifest["name"]
-            os.environ["REPRO_CAPSULE_ROOT"] = str(image_dir)
-            os.environ["REPRO_NO_NETWORK"] = "1"
-            os.environ.update(manifest.get("env", {}))
-            os.environ.update(extra_env or {})
-            yield
+            yield frame
         finally:
-            os.environ.clear()
-            os.environ.update(saved)
+            _ACTIVE_FRAMES.remove(frame)
+            _apply_frames()
 
     def run(self, image_dir: Path, fn: Callable[..., Any], *args,
             rank: int = 0, world_size: int = 1,
@@ -300,7 +355,14 @@ class CapsuleRuntime:
         pre = _tree_hash(image_dir)
         uid = os.getuid() if hasattr(os, "getuid") else 1000
         t0 = time.perf_counter()
-        with self._capsule_env(image_dir, manifest, env):
+        with self._capsule_env(image_dir, manifest, env) as frame:
+            # the composed env is the authoritative per-run scope:
+            # functions that declare a ``capsule_env`` parameter receive
+            # it directly and stay correct even when another in-process
+            # capsule is live concurrently (os.environ then holds the
+            # union, last entrant winning on shared keys)
+            if _accepts_capsule_env(fn):
+                kwargs = {**kwargs, "capsule_env": frame}
             value = fn(*args, **kwargs)
         wall = time.perf_counter() - t0
         if not writeable and _tree_hash(image_dir) != pre:

@@ -19,6 +19,16 @@ totals summary, and ``--trace-out BASE`` to enable request-lifecycle
 tracing and write ``BASE.jsonl`` (merged event log) plus
 ``BASE.chrome.json`` (Perfetto / chrome://tracing) at end of run;
 ``--trace-buffer-events`` sizes the per-replica ring buffer.
+
+``--fabric {local,mock}`` promotes the fleet across process
+boundaries: replicas become fabric workers (real subprocesses, or
+deterministic in-process mocks) launched through a
+``SchedulerBackend`` and driven over the shared-filesystem mailbox —
+the same gateway, health ladder, and salvage machinery, with the
+model rebuilt bit-identically in each worker from the declarative
+spec.  ``--spool DIR`` picks the spool directory; ``--trace-out``
+then merges gateway- and worker-side events into one fleet trace
+(``scripts/trace_report.py --fleet``).
 """
 from __future__ import annotations
 
@@ -37,12 +47,24 @@ def main(argv=None):
     ap.add_argument("--max-slots", type=int, default=4,
                     help="continuous-batching slots per replica")
     ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--fabric", choices=("local", "mock"), default=None,
+                    help="launch replicas as fabric workers behind the "
+                         "shared-filesystem mailbox instead of in-process "
+                         "engines: 'local' = real subprocess workers "
+                         "(LocalProcessBackend), 'mock' = deterministic "
+                         "in-process workers (MockBackend); requires "
+                         "--smoke — workers rebuild bit-identical weights "
+                         "from the declarative smoke spec")
+    ap.add_argument("--spool", default=None, metavar="DIR",
+                    help="fabric spool directory "
+                         "(default: results/fabric-spool)")
     ap.add_argument("--greedy", action="store_true")
-    ap.add_argument("--greedy-tie-eps", type=float, default=0.0,
+    ap.add_argument("--greedy-tie-eps", type=float, default=1e-2,
                     help="deterministic greedy tie break: pick the "
                          "lowest token id within eps of the max logit, "
                          "making argmax layout-stable under paged/dense "
-                         "summation-order noise (0 disables)")
+                         "summation-order noise (on by default; pass 0 "
+                         "to opt out and restore raw argmax)")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--metrics-json", default=None,
                     help="export full per-replica + merged telemetry JSON")
@@ -110,26 +132,62 @@ def main(argv=None):
                for t in arg.split(",") if t]
     slo_config = (SLOConfig.from_json(args.slo_config)
                   if args.slo_config else None)
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
-    engines = [ServingEngine(cfg, params, max_seq_len=args.max_seq_len,
-                             max_slots=args.max_slots, rng_seed=r,
-                             prefix_cache_blocks=args.prefix_cache_blocks,
-                             paged=args.paged, num_blocks=args.num_blocks,
-                             prefill_batch=args.prefill_batch,
-                             greedy_tie_eps=args.greedy_tie_eps)
-               for r in range(args.replicas)]
-    gateway = ReplicaGateway.from_engines(
-        engines, prefill_token_budget=args.prefill_token_budget,
-        tracing=args.trace_out is not None,
-        trace_buffer_events=args.trace_buffer_events,
-        slo_config=slo_config, profile=args.profile)
-    print(f"run config: arch={cfg.name} replicas={args.replicas} "
-          f"max_slots={args.max_slots} max_seq_len={args.max_seq_len} "
-          f"paged={args.paged} num_blocks={args.num_blocks} "
-          f"prefill_batch={engines[0].prefill_batch} "
-          f"prefill_chunk={engines[0].prefill_chunk} "
-          f"prefill_token_budget={args.prefill_token_budget} "
-          f"prefix_cache_blocks={args.prefix_cache_blocks}")
+    fabric_backend = None
+    spool = None
+    if args.fabric:
+        if not args.smoke:
+            raise SystemExit("--fabric requires --smoke: workers rebuild "
+                             "bit-identical weights from the declarative "
+                             "smoke-config spec")
+        if args.profile or args.slo_config:
+            raise SystemExit("--fabric replicas live in other processes; "
+                             "--profile / --slo-config introspection is "
+                             "in-process only")
+        from repro.serving import (LocalProcessBackend, MockBackend,
+                                   collect_fabric_traces,
+                                   launch_fabric_replicas, shutdown_fabric)
+        backend_cls = {"local": LocalProcessBackend, "mock": MockBackend}
+        fabric_backend = backend_cls[args.fabric]()
+        spool = Path(args.spool or "results/fabric-spool")
+        model_spec = {"config": args.arch, "seed": 0,
+                      "engine": {"max_seq_len": args.max_seq_len,
+                                 "max_slots": args.max_slots,
+                                 "prefill_batch": args.prefill_batch,
+                                 "greedy_tie_eps": args.greedy_tie_eps}}
+        gateway = launch_fabric_replicas(
+            args.replicas, fabric_backend, spool, model_spec=model_spec,
+            tracing=True)
+        print(f"run config: arch={cfg.name} replicas={args.replicas} "
+              f"fabric={args.fabric} spool={spool} "
+              f"max_slots={args.max_slots} max_seq_len={args.max_seq_len} "
+              f"prefill_batch={args.prefill_batch}")
+        for rep in gateway.replicas:
+            print(f"fabric replica {rep.name}: {rep.capsule['backend']} "
+                  f"job {rep.capsule['job_id']} "
+                  f"(partition {rep.capsule['partition']})")
+    else:
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        engines = [ServingEngine(cfg, params,
+                                 max_seq_len=args.max_seq_len,
+                                 max_slots=args.max_slots, rng_seed=r,
+                                 prefix_cache_blocks=args.prefix_cache_blocks,
+                                 paged=args.paged,
+                                 num_blocks=args.num_blocks,
+                                 prefill_batch=args.prefill_batch,
+                                 greedy_tie_eps=args.greedy_tie_eps)
+                   for r in range(args.replicas)]
+        gateway = ReplicaGateway.from_engines(
+            engines, prefill_token_budget=args.prefill_token_budget,
+            tracing=args.trace_out is not None,
+            trace_buffer_events=args.trace_buffer_events,
+            slo_config=slo_config, profile=args.profile)
+        print(f"run config: arch={cfg.name} replicas={args.replicas} "
+              f"max_slots={args.max_slots} max_seq_len={args.max_seq_len} "
+              f"paged={args.paged} num_blocks={args.num_blocks} "
+              f"prefill_batch={engines[0].prefill_batch} "
+              f"prefill_chunk={engines[0].prefill_chunk} "
+              f"prefill_token_budget={args.prefill_token_budget} "
+              f"prefix_cache_blocks={args.prefix_cache_blocks}")
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix,
@@ -221,13 +279,28 @@ def main(argv=None):
         out = atomic_write_json(args.metrics_out, stats["totals"])
         print(f"merged metrics summary -> {out}")
     if args.trace_out:
-        jsonl = gateway.export_trace_jsonl(f"{args.trace_out}.jsonl")
-        chrome = gateway.export_chrome_trace(f"{args.trace_out}.chrome.json")
-        n_ev = sum(tr.emitted_events for tr in gateway.tracers)
-        n_drop = sum(tr.dropped_events for tr in gateway.tracers)
-        print(f"trace: {n_ev} events ({n_drop} dropped by ring) -> "
-              f"{jsonl} + {chrome} "
-              f"(inspect: python scripts/trace_report.py {jsonl})")
+        if fabric_backend is not None:
+            # worker streams land in the spool only at clean exit — stop
+            # the fleet first, then merge gateway + worker events (no
+            # chrome export: worker clocks are per-process monotonic)
+            shutdown_fabric(gateway)
+            n_ev = collect_fabric_traces(gateway, spool,
+                                         f"{args.trace_out}.jsonl")
+            print(f"fabric trace: {n_ev} merged events -> "
+                  f"{args.trace_out}.jsonl (inspect: python "
+                  f"scripts/trace_report.py --fleet "
+                  f"{args.trace_out}.jsonl)")
+        else:
+            jsonl = gateway.export_trace_jsonl(f"{args.trace_out}.jsonl")
+            chrome = gateway.export_chrome_trace(
+                f"{args.trace_out}.chrome.json")
+            n_ev = sum(tr.emitted_events for tr in gateway.tracers)
+            n_drop = sum(tr.dropped_events for tr in gateway.tracers)
+            print(f"trace: {n_ev} events ({n_drop} dropped by ring) -> "
+                  f"{jsonl} + {chrome} "
+                  f"(inspect: python scripts/trace_report.py {jsonl})")
+    if fabric_backend is not None:
+        shutdown_fabric(gateway)    # idempotent if the trace path ran
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ Renders sbatch scripts whose payload is the paper's exact launch pattern:
 """
 from __future__ import annotations
 
+import shlex
 from typing import Dict, Optional
 
 _TEMPLATE = """#!/bin/bash
@@ -44,9 +45,13 @@ def render_script(job_name: str, image_dir: str, entrypoint: str,
         # paper §IV-C: hybrid MPI x OpenMP, one rank per node
         launch = (f"mpiexec -n {total_ranks} -ppn {ranks_per_node} "
                   f"ch-run {image_dir} -- {entrypoint} {script}")
-    extra = "\n".join(f"export {k}={v}" for k, v in (env or {}).items())
+    # values are shell-quoted (spool paths and JSON blobs carry spaces and
+    # quotes); OMP threads clamp to >=1 — hyperthread halving of a single
+    # CPU rank must not render OMP_NUM_THREADS=0
+    extra = "\n".join(f"export {k}={shlex.quote(str(v))}"
+                      for k, v in (env or {}).items())
     return _TEMPLATE.format(
         job_name=job_name, nodes=nodes, ranks_per_node=ranks_per_node,
         threads_per_rank=threads_per_rank, walltime=walltime,
-        partition=partition, omp_threads=threads_per_rank // 2,
+        partition=partition, omp_threads=max(1, threads_per_rank // 2),
         extra_env=extra, launch_line=launch)

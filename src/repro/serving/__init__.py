@@ -1,5 +1,13 @@
 from repro.serving.engine import (PrefillCursor, Request, SamplingParams,
                                   ServingEngine, make_serve_step)
+from repro.serving.fabric import (CapacityError, ClusterRegistry,
+                                  LocalProcessBackend, Mailbox,
+                                  MailboxError, MockBackend,
+                                  RemoteScheduler, ReplicaWorker,
+                                  SchedulerBackend, SlurmBackend,
+                                  WorkerSpec, collect_fabric_traces,
+                                  launch_fabric_replicas,
+                                  shutdown_fabric)
 from repro.serving.faults import (FAULT_KINDS, FAULT_SITES, FaultInjector,
                                   FaultPlan, FaultSpec, InjectedFault,
                                   ReplicaCrashed)

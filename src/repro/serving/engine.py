@@ -157,7 +157,7 @@ class ServingEngine:
                  rng_seed: int = 0, kv_block_size: int = 16,
                  prefix_cache_blocks: int = 0, prefill_chunk: int = 16,
                  paged: bool = False, num_blocks: Optional[int] = None,
-                 prefill_batch: int = 4, greedy_tie_eps: float = 0.0):
+                 prefill_batch: int = 4, greedy_tie_eps: float = 1e-2):
         self.cfg = cfg
         self.params = params
         self.max_seq_len = max_seq_len
@@ -167,7 +167,10 @@ class ServingEngine:
         # > 0 makes greedy argmax layout-deterministic: any token whose
         # logit is within eps of the max is eligible and the LOWEST id
         # wins, so the ~1e-3 page-order summation noise between the
-        # paged and dense layouts can no longer flip a near-tie argmax
+        # paged and dense layouts can no longer flip a near-tie argmax.
+        # On by default (1e-2) since the chaos/failover suites held
+        # bit-identity with it armed across every fault schedule; pass
+        # 0.0 to restore the historical raw-argmax outputs
         self.greedy_tie_eps = float(greedy_tie_eps)
         # rows per compiled paged-prefill program (co-admission width);
         # dense mode prefills serially whatever the batch size

@@ -505,10 +505,13 @@ class ReplicaGateway:
         return progressed
 
     def rejoin(self, i: int) -> None:
-        """Relaunch replica ``i``'s capsule: a fresh scheduler over the
-        *same* engine (the engine-held prefix cache survives, so
-        re-routed prompts probe warm), rid numbering carried forward so
-        the shared tracer/metrics never see a rid collision."""
+        """Relaunch replica ``i``'s capsule.  In-process: a fresh
+        scheduler over the *same* engine (the engine-held prefix cache
+        survives, so re-routed prompts probe warm), rid numbering
+        carried forward so the shared tracer/metrics never see a rid
+        collision.  A fabric replica (anything exposing ``respawn``)
+        instead cancels its old worker job and submits a fresh one for
+        the same spec — the cross-process capsule relaunch."""
         rep = self.replicas[i]
         old = rep.scheduler
         mon = self.health[i]
@@ -516,27 +519,32 @@ class ReplicaGateway:
             old.abort()        # should be empty post-salvage; make sure
         except Exception:      # noqa: BLE001 — best-effort, like salvage
             pass
-        # the injector is carried, NOT reset: an exhausted transient
-        # fault stays exhausted — the plan's schedule is absolute over
-        # the replica's lifetime, so a rejoined replica does not replay
-        # the stall that quarantined it
-        inj = old.fault_injector
-        new = Scheduler(old.engine, tracer=old.tracer,
-                        max_admissions_per_step=old.max_admissions_per_step,
-                        prefill_token_budget=old.prefill_token_budget,
-                        profile=old.profiler is not None,
-                        fault_injector=inj)
-        new._next_rid = old._next_rid
-        new.done.update(old.done)      # finished outputs stay reachable
-        new.draining = self.draining
+        if hasattr(old, "respawn"):
+            new = old.respawn(draining=self.draining)
+        else:
+            # the injector is carried, NOT reset: an exhausted transient
+            # fault stays exhausted — the plan's schedule is absolute
+            # over the replica's lifetime, so a rejoined replica does
+            # not replay the stall that quarantined it
+            inj = old.fault_injector
+            new = Scheduler(
+                old.engine, tracer=old.tracer,
+                max_admissions_per_step=old.max_admissions_per_step,
+                prefill_token_budget=old.prefill_token_budget,
+                profile=old.profiler is not None,
+                fault_injector=inj)
+            new._next_rid = old._next_rid
+            new.done.update(old.done)  # finished outputs stay reachable
+            new.draining = self.draining
         rep.scheduler = new
         self._quarantined_at[i] = None
         tr = mon.mark_rejoined()
         rep.scheduler.tracer.replica_health(
             rep.name, str(tr["from"]), str(tr["to"]), str(tr["reason"]),
             int(tr["consecutive_bad"]))  # type: ignore[call-overload]
-        kv = old.engine.kv
-        warm = kv.prefix_pool.in_use if kv.prefix_pool is not None else 0
+        kv = new.engine.kv
+        pool = getattr(kv, "prefix_pool", None)
+        warm = pool.in_use if pool is not None else 0
         rep.scheduler.tracer.rejoin(rep.name, mon.rejoins, warm)
 
     # -- degradation ladder --------------------------------------------------

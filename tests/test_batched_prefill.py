@@ -227,8 +227,13 @@ def test_paged_prefill_window_softcap_families(arch):
     sps = [SamplingParams(max_new_tokens=4, greedy=True)] * 3
 
     def serve(paged):
+        # raw argmax (eps=0): softcaps compress the logit spectrum, so a
+        # 1e-2 tie set puts tokens at its boundary where dense/paged
+        # summation noise flips membership — the bit-identity this test
+        # pins is the stronger property for these workloads
         eng = ServingEngine(cfg, params, max_seq_len=32, max_slots=3,
-                            kv_block_size=8, paged=paged)
+                            kv_block_size=8, paged=paged,
+                            greedy_tie_eps=0.0)
         sched = Scheduler(eng)
         rids = [sched.submit(Request(p, sp))
                 for p, sp in zip(prompts, sps)]

@@ -7,12 +7,17 @@ import jax
 import numpy as np
 import pytest
 
-from repro.serving import (DegradationPolicy, FaultInjector, FaultPlan,
+from repro.serving import (CapacityError, ClusterRegistry,
+                           DegradationPolicy, FaultInjector, FaultPlan,
                            FaultSpec, HealthConfig, HealthMonitor,
-                           InjectedFault, Overloaded, ReplicaCrashed,
+                           InjectedFault, Mailbox, MailboxError,
+                           MockBackend, Overloaded, ReplicaCrashed,
                            ReplicaGateway, Request, RequestFailed,
                            RetryPolicy, SamplingParams, Scheduler,
-                           ServingEngine, launch_capsule_replicas)
+                           ServingEngine, SlurmBackend, WorkerSpec,
+                           launch_capsule_replicas,
+                           launch_fabric_replicas, shutdown_fabric)
+from repro.serving.fabric import COMPLETED, PENDING, RUNNING, Partition
 from repro.serving.health import DEAD, DEGRADED, HEALTHY, QUARANTINED
 
 
@@ -498,3 +503,308 @@ def test_chaos_random_faults_resolve_every_request(qwen, seed):
     for i, rep in enumerate(gw.replicas):
         if gw.health[i].routable:
             _assert_no_leaks(rep.scheduler)
+
+
+# ---------------------------------------------------------------------------
+# cross-process fabric: MockBackend drives the real worker + mailbox
+# code deterministically — the same paths LocalProcessBackend runs as
+# subprocesses in benchmarks/fabric.py
+# ---------------------------------------------------------------------------
+
+def _mock_fleet(qwen, tmp_path, n=2, *, backend_kw=None, **gateway_kw):
+    backend = MockBackend(
+        engine_factory=lambda name: _engine(qwen, greedy_tie_eps=TIE_EPS),
+        **(backend_kw or {}))
+    gateway_kw.setdefault("tracing", True)
+    gw = launch_fabric_replicas(n, backend, tmp_path / "spool",
+                                **gateway_kw)
+    return backend, gw
+
+
+def _kill_when_inflight(gw, backend, victim, *, action=None):
+    """Step until the victim's heartbeat shows in-flight work, then pull
+    the chaos lever (default: SIGKILL analogue)."""
+    for _ in range(100):
+        gw.step()
+        if victim.active or victim.prefilling:
+            (action or backend.kill)(victim.handle)
+            return
+    pytest.fail("victim never reported in-flight work")
+
+
+def test_fabric_mock_round_trip_bit_identical(qwen, tmp_path):
+    """Fault-free mock fleet: every request crosses the mailbox twice
+    (submit in, result out) and still matches the solo oracle exactly;
+    shutdown releases the registry capacity and finalizes the workers."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(21)
+    backend, gw = _mock_fleet(qwen, tmp_path)
+    assert backend.registry.free_nodes("general") == 6    # 2 of 8 committed
+    reqs = _requests(cfg, rng, 5, max_new=4)
+    handles = [gw.submit(r) for r in reqs]
+    gw.drain()
+    for h, r in zip(handles, reqs):
+        out = gw.result(h)
+        assert not isinstance(out, RequestFailed)
+        np.testing.assert_array_equal(
+            out, _oracle(qwen, r.prompt, r.params.max_new_tokens))
+    shutdown_fabric(gw)
+    assert backend.registry.free_nodes("general") == 8
+    for rep in gw.replicas:
+        status = (tmp_path / "spool" / rep.name / "status.json")
+        assert status.exists()
+
+
+def test_fabric_crash_failover_bit_identical(qwen, tmp_path):
+    """Kill a mock worker while its heartbeat shows in-flight requests:
+    the gateway sees the job FAIL, marks the replica DEAD, salvages from
+    the last heartbeat's emitted map, and the failed-over outputs stay
+    bit-identical to the oracle."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(23)
+    backend, gw = _mock_fleet(qwen, tmp_path)
+    reqs = _requests(cfg, rng, 6, max_new=5)
+    handles = [gw.submit(r) for r in reqs]
+    victim = gw.replicas[0].scheduler
+    _kill_when_inflight(gw, backend, victim)
+    gw.drain()
+    assert gw.health[0].state == DEAD
+    assert gw.stats()["fleet"]["failovers"] == 1
+    for h, r in zip(handles, reqs):
+        out = gw.result(h)
+        assert not isinstance(out, RequestFailed)
+        np.testing.assert_array_equal(
+            out, _oracle(qwen, r.prompt, r.params.max_new_tokens))
+    kinds = {e["kind"] for e in gw.trace_events()}
+    assert {"replica_health", "replica_failover", "replica_retry"} <= kinds
+
+
+def test_fabric_stale_heartbeats_quarantine_and_salvage(qwen, tmp_path):
+    """A wedged worker (process alive, heartbeat seq frozen — a hung
+    filesystem client) stops making observable progress: the ladder
+    quarantines it and its work re-homes bit-identically."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(25)
+    backend, gw = _mock_fleet(
+        qwen, tmp_path,
+        health=HealthConfig(degraded_after=2, quarantine_after=4,
+                            auto_rejoin=False))
+    reqs = _requests(cfg, rng, 5, max_new=4)
+    handles = [gw.submit(r) for r in reqs]
+    victim = gw.replicas[0].scheduler
+    _kill_when_inflight(gw, backend, victim, action=backend.stall)
+    gw.drain()
+    assert gw.health[0].state == QUARANTINED
+    for h, r in zip(handles, reqs):
+        out = gw.result(h)
+        assert not isinstance(out, RequestFailed)
+        np.testing.assert_array_equal(
+            out, _oracle(qwen, r.prompt, r.params.max_new_tokens))
+
+
+def test_fabric_quarantined_replica_respawns_and_serves(qwen, tmp_path):
+    """Quarantine auto-rejoin on a remote replica goes through
+    respawn(): the old job is cancelled, a *fresh worker job* is
+    submitted for the same spec, and the relaunched replica serves new
+    traffic."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(27)
+    backend, gw = _mock_fleet(
+        qwen, tmp_path,
+        health=HealthConfig(degraded_after=2, quarantine_after=3,
+                            rejoin_cooldown_steps=2))
+    reqs = _requests(cfg, rng, 4, max_new=4)
+    handles = [gw.submit(r) for r in reqs]
+    victim = gw.replicas[0].scheduler
+    old_job = victim.handle.job_id
+    _kill_when_inflight(gw, backend, victim, action=backend.stall)
+    gw.drain()
+    for h, r in zip(handles, reqs):
+        out = gw.result(h)
+        assert not isinstance(out, RequestFailed)
+        np.testing.assert_array_equal(
+            out, _oracle(qwen, r.prompt, r.params.max_new_tokens))
+    for _ in range(10):
+        if gw.health[0].state == HEALTHY:
+            break
+        gw.step()
+    assert gw.health[0].state == HEALTHY and gw.health[0].rejoins == 1
+    assert gw.replicas[0].scheduler.handle.job_id != old_job
+    gw.draining = False
+    for rep in gw.replicas:
+        rep.scheduler.draining = False
+    r2 = Request(_prompt(rng, cfg, 5),
+                 SamplingParams(max_new_tokens=3, greedy=True))
+    h2 = gw.submit(r2)
+    gw.drain()
+    out = gw.result(h2)
+    assert not isinstance(out, RequestFailed)
+    np.testing.assert_array_equal(out, _oracle(qwen, r2.prompt, 3))
+
+
+def test_fabric_mock_fault_plan_crash(qwen, tmp_path):
+    """The PR 9 chaos harness extends across the (simulated) process
+    boundary: a FaultPlan crash wired into a mock worker's scheduler
+    surfaces as a FAILED job -> DEAD replica -> bit-identical failover."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(29)
+    plan = FaultPlan([FaultSpec(kind="crash", replica="replica0",
+                                at_step=2)])
+    backend, gw = _mock_fleet(qwen, tmp_path,
+                              backend_kw={"fault_plan": plan})
+    reqs = _requests(cfg, rng, 4, max_new=4)
+    handles = [gw.submit(r) for r in reqs]
+    gw.drain()
+    assert gw.health[0].state == DEAD
+    assert "crash" in (gw.replicas[0].scheduler.handle.error or "").lower() \
+        or gw.replicas[0].scheduler.handle.error
+    for h, r in zip(handles, reqs):
+        out = gw.result(h)
+        assert not isinstance(out, RequestFailed)
+        np.testing.assert_array_equal(
+            out, _oracle(qwen, r.prompt, r.params.max_new_tokens))
+
+
+# ---------------------------------------------------------------------------
+# mailbox transport fault cases: truncated / partial messages, corrupt
+# heartbeats, duplicate results — typed failures or idempotent no-ops
+# ---------------------------------------------------------------------------
+
+def test_mailbox_truncated_message_is_typed_and_lossless(tmp_path):
+    mb = Mailbox(tmp_path / "spool", "r0")
+    mb.post_to_worker("drain")
+    (mb.inbox / "00000002.99.json").write_text('{"kind": "sub')  # truncated
+    with pytest.raises(MailboxError, match="corrupt"):
+        mb.collect_inbox()
+    # nothing was consumed: the valid message sorted before the corrupt
+    # one must still be delivered once the spool is repaired
+    with pytest.raises(MailboxError):
+        mb.collect_inbox()
+    (mb.inbox / "00000002.99.json").unlink()
+    assert [m["kind"] for m in mb.collect_inbox()] == ["drain"]
+    # a message that parses but has no 'kind' is malformed, same typing
+    (mb.inbox / "00000003.99.json").write_text('{"rid": 1}')
+    with pytest.raises(MailboxError, match="no 'kind'"):
+        mb.collect_inbox()
+
+
+def test_mailbox_inflight_tmp_files_are_invisible(tmp_path):
+    """A crashed writer leaves a ``.tmp`` file mid-write; readers must
+    never see it — atomic rename means a ``*.json`` is complete by
+    construction."""
+    mb = Mailbox(tmp_path / "spool", "r0")
+    (mb.inbox / "00000001.99.json.tmp").write_text('{"kind": "sub')
+    assert mb.collect_inbox() == []
+    mb.post_to_worker("stop")
+    assert [m["kind"] for m in mb.collect_inbox()] == ["stop"]
+
+
+def test_mailbox_corrupt_heartbeat_is_typed(tmp_path):
+    mb = Mailbox(tmp_path / "spool", "r0")
+    assert mb.read_heartbeat() is None          # no heartbeat yet: None
+    mb.write_heartbeat({"seq": 1})
+    assert mb.read_heartbeat() == {"seq": 1}
+    mb.heartbeat_path.write_text('{"seq": ')    # spool corruption
+    with pytest.raises(MailboxError, match="corrupt heartbeat"):
+        mb.read_heartbeat()
+    mb.heartbeat_path.write_text('[1, 2]')      # parses, wrong shape
+    with pytest.raises(MailboxError, match="not an object"):
+        mb.read_heartbeat()
+
+
+def test_fabric_corrupt_spool_climbs_health_ladder(qwen, tmp_path):
+    """A corrupt message file in a live replica's outbox surfaces as a
+    MailboxError every gateway step — a transient (non-fatal) failure
+    that climbs the ladder to QUARANTINED, after which the victim's work
+    re-homes and completes bit-identically."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(31)
+    backend, gw = _mock_fleet(
+        qwen, tmp_path,
+        health=HealthConfig(degraded_after=2, quarantine_after=4,
+                            auto_rejoin=False))
+    reqs = _requests(cfg, rng, 4, max_new=4)
+    handles = [gw.submit(r) for r in reqs]
+    victim = gw.replicas[0].scheduler
+    # disk fault: an unparseable message lands in the victim's outbox
+    (victim.mailbox.outbox / "00000000.0.json").write_text("garbage")
+    gw.drain()
+    assert gw.health[0].state == QUARANTINED
+    assert "MailboxError" in gw.health[0].last_error
+    for h, r in zip(handles, reqs):
+        out = gw.result(h)
+        assert not isinstance(out, RequestFailed)
+        np.testing.assert_array_equal(
+            out, _oracle(qwen, r.prompt, r.params.max_new_tokens))
+
+
+def test_fabric_duplicate_result_is_idempotent(qwen, tmp_path):
+    """A slow worker racing its own failover can deliver a result for a
+    request the gateway already resolved elsewhere — the duplicate must
+    be dropped, not clobber the canonical output."""
+    cfg, _ = qwen
+    rng = np.random.default_rng(33)
+    backend, gw = _mock_fleet(qwen, tmp_path, n=1)
+    r = Request(_prompt(rng, cfg, 5),
+                SamplingParams(max_new_tokens=4, greedy=True))
+    h = gw.submit(r)
+    gw.drain()
+    out1 = np.asarray(gw.result(h))
+    rs = gw.replicas[0].scheduler
+    # forge a late duplicate with different tokens for the finished rid
+    rs.mailbox.post_to_gateway("result", rid=0, tokens=[1, 2, 3])
+    rs.step()
+    np.testing.assert_array_equal(rs.done[0], out1)
+    np.testing.assert_array_equal(gw.result(h), out1)
+
+
+# ---------------------------------------------------------------------------
+# registry + slurm backend lifecycle (no engine)
+# ---------------------------------------------------------------------------
+
+def test_fabric_capacity_validated_before_submit(tmp_path):
+    reg = ClusterRegistry()
+    reg.add(Partition("tiny", nodes=2))
+    backend = SlurmBackend(registry=reg)
+    spool = tmp_path / "spool"
+    for i in range(2):
+        backend.submit(WorkerSpec(replica=f"replica{i}", spool=spool,
+                                  partition="tiny"))
+    with pytest.raises(CapacityError, match="0 free of 2"):
+        backend.submit(WorkerSpec(replica="replica2", spool=spool,
+                                  partition="tiny"))
+    assert len(backend.jobs) == 2          # the refused submit left no job
+    with pytest.raises(CapacityError, match="unknown partition"):
+        backend.submit(WorkerSpec(replica="replica3", spool=spool,
+                                  partition="gpu"))
+    assert reg.summary() == [{"partition": "tiny", "nodes": 2,
+                              "committed": 2, "free": 0}]
+
+
+def test_fabric_slurm_backend_renders_and_tracks_lifecycle(tmp_path):
+    """SlurmBackend renders a real sbatch script through launch/slurm
+    (shell-quoted worker argv, fabric env) and tracks the job off the
+    worker's spool signals: heartbeat -> RUNNING, status -> COMPLETED."""
+    import json as _json
+    backend = SlurmBackend()
+    spool = tmp_path / "spool"
+    spec = WorkerSpec(replica="replica0", spool=spool,
+                      model_spec={"seed": 3}, image_dir="/tmp/caps/img")
+    h = backend.submit(spec)
+    script = (spool / "jobs" / f"{h.job_id}-replica0.sbatch").read_text()
+    assert "#SBATCH --job-name=fabric-replica0" in script
+    assert "ch-run /tmp/caps/img" in script
+    assert "-m repro.serving.fabric.worker" in script
+    assert "--image-dir /tmp/caps/img" in script
+    assert "'{\"seed\": 3}'" in script      # JSON blob shell-quoted
+    assert f"export REPRO_FABRIC_SPOOL={str(spool)}" in script
+    assert backend.poll(h) == PENDING
+    mb = Mailbox(spool, "replica0")
+    mb.write_heartbeat({"seq": 1})
+    assert backend.poll(h) == RUNNING
+    (mb.home / "status.json").write_text(
+        _json.dumps({"state": "completed", "error": ""}))
+    assert backend.poll(h) == COMPLETED
+    assert backend.registry.free_nodes("general") == 8   # released
+    backend.cancel(h)                                    # idempotent
+    assert backend.poll(h) == COMPLETED

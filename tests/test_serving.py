@@ -83,7 +83,9 @@ def test_scheduler_matches_prerefactor_greedy_algorithm(qwen):
     (prefill last-logit sample, then one step per token) bit-for-bit."""
     from repro.models import transformer as T
     cfg, params = qwen
-    eng = _engine(qwen)
+    # raw-argmax engine: the pre-refactor loop below has no tie break
+    eng = ServingEngine(cfg, params, max_seq_len=48, max_slots=2,
+                        rng_seed=0, greedy_tie_eps=0.0)
     prompt = np.array([5, 9, 2, 7], np.int32)
     out = eng.generate([Request(prompt, SamplingParams(max_new_tokens=6,
                                                        greedy=True))])[0]

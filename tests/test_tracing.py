@@ -378,7 +378,11 @@ def test_paged_vs_dense_divergence_only_at_near_ties(qwen):
     wherever paged and dense greedy outputs diverge on random
     workloads, the dense logits at the first divergent position must be
     a near-tie between the two chosen tokens — a decisive-argmax
-    divergence would be a real kernel bug, and fails here."""
+    divergence would be a real kernel bug, and fails here.
+
+    The tie-break is now ON by default (``greedy_tie_eps=1e-2``), so
+    this test arms ``greedy_tie_eps=0.0`` explicitly: it exercises the
+    raw-argmax opt-out path, which is where the caveat still lives."""
     cfg, _ = qwen
     NEAR_TIE = 1e-2                    # generous bound over the ~1e-3 seen
     divergences = 0
@@ -389,7 +393,8 @@ def test_paged_vs_dense_divergence_only_at_near_ties(qwen):
         max_news = [int(rng.integers(2, 8)) for _ in prompts]
 
         def serve(paged):
-            sched = Scheduler(_engine(qwen, paged=paged))
+            sched = Scheduler(_engine(qwen, paged=paged,
+                                      greedy_tie_eps=0.0))
             rids = [sched.submit(Request(p, SamplingParams(
                 max_new_tokens=m, greedy=True)))
                 for p, m in zip(prompts, max_news)]
